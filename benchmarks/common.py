@@ -1,0 +1,35 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup=2, iters=5, **kw):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us per call
+
+
+def emit(name, us_per_call, derived):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def pretrain_smoke(cfg, src, steps=80, lr=2e-3, seed=0):
+    """Briefly pretrain a smoke model so probe/eval signals are meaningful."""
+    import jax, jax.numpy as jnp
+    from repro.launch import specs as SP
+    from repro.models import common as cm
+    from repro.models import transformer as T
+    from repro.optim import adamw
+    params = cm.instantiate(T.model_spec(cfg), jax.random.PRNGKey(seed))
+    opt_cfg = adamw.AdamWConfig(lr=lr, warmup_steps=10, total_steps=steps)
+    step = jax.jit(SP.make_train_step(cfg, opt_cfg))
+    opt = adamw.init(params)
+    for s_ in range(steps):
+        b = {"tokens": jnp.asarray(src.batch_at(s_)["tokens"])}
+        params, opt, _ = step(params, opt, b, jax.random.PRNGKey(s_))
+    return params

@@ -1,0 +1,55 @@
+"""Paper Fig. 4 / Tab. 1 analogue: graceful degradation across budgets after
+consolidation (eval CE per budget on held-out synthetic stream)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, pretrain_smoke
+from repro.configs import get_config
+from repro.core import flexrank as FR
+from repro.data.pipeline import SyntheticTokens, calibration_batches
+from repro.models import common as cm
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def main():
+    cfg = get_config("gpt2-small", smoke=True)
+    src = SyntheticTokens(cfg.vocab_size, 32, 8, seed=0)
+    dense = pretrain_smoke(cfg, src, steps=80)
+    moments = FR.collect_moments(dense, cfg, calibration_batches(src, 3))
+    fact, curves = FR.decompose(dense, cfg, moments)
+    table, infos = FR.build_table(cfg, curves)
+    tdev = FR.table_device(table)
+
+    loss_fn = FR.make_consolidation_loss(cfg, infos, tdev, dense)
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=100)
+    state = adamw.init(fact)
+
+    @jax.jit
+    def step(params, state, batch, rng):
+        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch, rng)
+        params, state, _ = adamw.apply_updates(params, g, state, opt_cfg)
+        return params, state, l
+
+    params = fact
+    t0 = time.perf_counter()
+    for i in range(100):
+        b = {"tokens": jnp.asarray(src.batch_at(i)["tokens"])}
+        params, state, _ = step(params, state, b, jax.random.PRNGKey(i))
+    us = (time.perf_counter() - t0) * 1e6 / 100
+
+    eval_batch = {"tokens": jnp.asarray(src.batch_at(10_000)["tokens"])}
+    full = FR.eval_budget_loss(params, cfg, infos, tdev, eval_batch,
+                               table.table.shape[0] - 1)
+    for k in range(table.table.shape[0]):
+        ce = FR.eval_budget_loss(params, cfg, infos, tdev, eval_batch, k)
+        pcount = FR.deployed_param_count(cfg, infos, table, k)
+        emit(f"tab1_row{k}_ce", us, f"{ce:.4f}")
+        emit(f"tab1_row{k}_params", us, str(pcount))
+        emit(f"tab1_row{k}_ce_delta_vs_full", us, f"{ce-full:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Fig. 10: dense vs naive low-rank vs GAR forward cost across ranks.
+
+CPU container: we report measured microseconds (trend evidence) AND the exact
+theoretical FLOP ratios of §3.5 — on TPU the Pallas gar_matmul realizes them.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core.gar import dense_flops, gar_flops, lowrank_flops
+from repro.kernels import ops
+
+
+def main():
+    m = n = 1024
+    tokens = 2048
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((tokens, n)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((n, m)).astype(np.float32))
+
+    dense = jax.jit(lambda x: x @ w)
+    us_dense = time_call(dense, x)
+    emit("fig10_dense", us_dense, "1.000")
+
+    for frac in (0.125, 0.25, 0.5, 0.75, 0.9):
+        r = int(min(m, n) * frac)
+        v = jnp.asarray(rng.standard_normal((n, r)).astype(np.float32))
+        u = jnp.asarray(rng.standard_normal((m, r)).astype(np.float32))
+        u_hat = jnp.asarray(rng.standard_normal((m - r, r)).astype(np.float32))
+        perm_inv = jnp.asarray(np.arange(m, dtype=np.int32))
+
+        naive = jax.jit(lambda x: (x @ v) @ u.T)
+        garf = jax.jit(lambda x: ops.gar_forward(x, v, u_hat, perm_inv))
+        us_naive = time_call(naive, x)
+        us_gar = time_call(garf, x)
+        th_naive = lowrank_flops(m, n, r) / dense_flops(m, n)
+        th_gar = gar_flops(m, n, r) / dense_flops(m, n)
+        emit(f"fig10_r{r}_naive_meas", us_naive, f"{us_naive/us_dense:.3f}")
+        emit(f"fig10_r{r}_naive_theory", us_naive, f"{th_naive:.3f}")
+        emit(f"fig10_r{r}_gar_meas", us_gar, f"{us_gar/us_dense:.3f}")
+        emit(f"fig10_r{r}_gar_theory", us_gar, f"{th_gar:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Paper Fig. 3 / Fig. 8: FlexRank (nested training, shared weights) vs
+independently-trained submodels at matched budget, from DataSVD init.
+
+Small LM setting: for each budget row we report eval CE of (a) the single
+shared-weight FlexRank model and (b) a per-budget independently trained
+model (same init, same per-model step budget = total/K).
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, pretrain_smoke
+from repro.configs import get_config
+from repro.core import flexrank as FR
+from repro.core import distill
+from repro.data.pipeline import SyntheticTokens, calibration_batches
+from repro.models import common as cm
+from repro.models import transformer as T
+from repro.optim import adamw
+
+TOTAL_STEPS = 120
+
+
+def _train(loss_fn, params, src, steps, lr=3e-3, seed=0):
+    opt_cfg = adamw.AdamWConfig(lr=lr, warmup_steps=5, total_steps=steps)
+    state = adamw.init(params)
+
+    @jax.jit
+    def step(params, state, batch, rng):
+        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch, rng)
+        params, state, _ = adamw.apply_updates(params, g, state, opt_cfg)
+        return params, state, l
+
+    for i in range(steps):
+        b = {"tokens": jnp.asarray(src.batch_at(i)["tokens"])}
+        params, state, _ = step(params, state, b, jax.random.PRNGKey(seed * 997 + i))
+    return params
+
+
+def main():
+    cfg = get_config("gpt2-small", smoke=True)
+    src = SyntheticTokens(cfg.vocab_size, 32, 8, seed=0)
+    dense = pretrain_smoke(cfg, src, steps=80)
+    moments = FR.collect_moments(dense, cfg, calibration_batches(src, 3))
+    fact, curves = FR.decompose(dense, cfg, moments)
+    table, infos = FR.build_table(cfg, curves)
+    tdev = FR.table_device(table)
+    K = table.table.shape[0]
+    eval_batch = {"tokens": jnp.asarray(src.batch_at(10_000)["tokens"])}
+
+    # (a) FlexRank: one shared model, nested sampling
+    t0 = time.perf_counter()
+    loss_fn = FR.make_consolidation_loss(cfg, infos, tdev, dense)
+    shared = _train(loss_fn, fact, src, TOTAL_STEPS)
+    us = (time.perf_counter() - t0) * 1e6
+
+    # (b) independent: one model per budget, TOTAL_STEPS/K steps each
+    indep_ce = []
+    for k in range(K):
+        def loss_k(params, batch, rng, k=k):
+            toks = batch["tokens"][:, :-1]
+            labels = batch["tokens"][:, 1:]
+            ranks = FR.ranks_tree(cfg, infos, tdev, jnp.asarray(k))
+            s_logits, aux = T.forward(params, cfg, toks, ranks=ranks)
+            t_logits, _ = T.forward(dense, cfg, toks)
+            return distill.consolidation_loss(s_logits, t_logits, labels) + aux, {}
+        p_k = _train(loss_k, fact, src, max(TOTAL_STEPS // K, 1), seed=k + 1)
+        indep_ce.append(FR.eval_budget_loss(p_k, cfg, infos, tdev, eval_batch, k))
+
+    for k in range(K):
+        ce_sh = FR.eval_budget_loss(shared, cfg, infos, tdev, eval_batch, k)
+        emit(f"fig8_budget{k}_flexrank_ce", us / TOTAL_STEPS, f"{ce_sh:.4f}")
+        emit(f"fig8_budget{k}_indep_ce", us / TOTAL_STEPS, f"{indep_ce[k]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

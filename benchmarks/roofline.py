@@ -1,0 +1,30 @@
+"""§Roofline: read dry-run JSONs and emit the per-cell three-term table."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def main():
+    d = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+    files = sorted(glob.glob(os.path.join(d, "*.json")))
+    if not files:
+        emit("roofline_no_results", 0.0, "run launch/dryrun.py first")
+        return
+    for f in files:
+        r = json.load(open(f))
+        tag = f"{r['arch']}:{r['shape']}:{r['mesh']}:{r['mode']}"
+        if r.get("status") != "ok":
+            emit(f"roofline_{tag}", 0.0, "FAIL")
+            continue
+        terms = (r["t_compute"], r["t_memory"], r["t_collective"])
+        frac = r["t_compute"] / max(sum(terms), 1e-12)
+        emit(f"roofline_{tag}", r.get("compile_s", 0) * 1e6,
+             f"tc={terms[0]:.4f};tm={terms[1]:.4f};tl={terms[2]:.4f};"
+             f"bneck={r['bottleneck']};compute_frac={frac:.3f};"
+             f"useful={r.get('useful_flops_ratio', 0):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig10,roofline
+"""
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    ("fig2_nestedness", "benchmarks.nestedness"),
+    ("fig3_fig8_pareto_recovery", "benchmarks.pareto_recovery"),
+    ("fig6_dp_profiles", "benchmarks.dp_profiles"),
+    ("fig7a_calibration", "benchmarks.calibration"),
+    ("fig9_ranking_preservation", "benchmarks.ranking_preservation"),
+    ("fig10_gar_speedup", "benchmarks.gar_speedup"),
+    ("tab1_elastic_eval", "benchmarks.elastic_eval"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filters")
+    args = ap.parse_args()
+    filters = args.only.split(",") if args.only else None
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in MODULES:
+        if filters and not any(f in name for f in filters):
+            continue
+        print(f"# --- {name} ({mod}) ---", flush=True)
+        try:
+            importlib.import_module(mod).main()
+        except Exception as e:  # noqa: BLE001
+            failed.append((name, e))
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {[n for n, _ in failed]}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""End-to-end driver: pretrain a base LM, FlexRank-decompose it, consolidate
+the nested submodels by distillation, and report the budget/quality Pareto
+curve — paper Algorithm 1 start to finish, at a scale this CPU can run.
+
+Default is a ~15M-param model for a few hundred steps; --full switches to the
+real gpt2-small (124M) recipe for a cluster.
+
+  PYTHONPATH=src python examples/elastic_distillation.py --pretrain-steps 120 \
+      --consolidate-steps 200
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import FlexRankConfig, Segment
+from repro.core import flexrank as FR
+from repro.data import SyntheticTokens, calibration_batches
+from repro.launch import specs as SP
+from repro.models import common as cm
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def small_config():
+    base = get_config("gpt2-small")
+    return dataclasses.replace(
+        base, name="gpt2-15m", d_model=256, num_heads=8, num_kv_heads=8,
+        d_ff=1024, vocab_size=4096, num_layers=6,
+        segments=tuple(Segment("attn", 1) for _ in range(6)),
+        flexrank=FlexRankConfig(enabled=True, rank_levels=12))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pretrain-steps", type=int, default=120)
+    ap.add_argument("--consolidate-steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--full", action="store_true", help="real gpt2-small recipe")
+    args = ap.parse_args()
+
+    cfg = get_config("gpt2-small") if args.full else small_config()
+    src = SyntheticTokens(cfg.vocab_size, args.seq_len, args.batch, seed=0)
+    params = cm.instantiate(T.model_spec(cfg), jax.random.PRNGKey(0))
+
+    # ---- stage 0: pretrain the base model ----
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=20,
+                                total_steps=args.pretrain_steps)
+    step_fn = jax.jit(SP.make_train_step(cfg, opt_cfg))
+    opt = adamw.init(params)
+    t0 = time.time()
+    for s in range(args.pretrain_steps):
+        batch = {"tokens": jnp.asarray(src.batch_at(s)["tokens"])}
+        params, opt, m = step_fn(params, opt, batch, jax.random.PRNGKey(s))
+        if s % 20 == 0:
+            print(f"[pretrain] step {s} loss {float(m['loss']):.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    dense = params
+
+    # ---- stage 1-2: calibrate + decompose + DP (Algorithm 1) ----
+    moments = FR.collect_moments(dense, cfg, calibration_batches(src, 4))
+    fact, curves = FR.decompose(dense, cfg, moments)
+    table, infos = FR.build_table(cfg, curves)
+    tdev = FR.table_device(table)
+    print(f"[flexrank] {len(infos)} groups, {table.table.shape[0]} budgets")
+
+    # ---- stage 3: knowledge consolidation (Eq. 5/6) ----
+    loss_fn = FR.make_consolidation_loss(cfg, infos, tdev, dense)
+    c_cfg = adamw.AdamWConfig(lr=5e-4, warmup_steps=20,
+                              total_steps=args.consolidate_steps)
+    c_opt = adamw.init(fact)
+
+    @jax.jit
+    def c_step(p, o, b, r):
+        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b, r)
+        p, o, _ = adamw.apply_updates(p, g, o, c_cfg)
+        return p, o, l
+
+    for s in range(args.consolidate_steps):
+        batch = {"tokens": jnp.asarray(src.batch_at(10_000 + s)["tokens"])}
+        fact, c_opt, l = c_step(fact, c_opt, batch, jax.random.PRNGKey(777 + s))
+        if s % 25 == 0:
+            print(f"[consolidate] step {s} kd-loss {float(l):.4f}", flush=True)
+
+    # ---- deploy everywhere: the budget/quality Pareto curve ----
+    eval_batch = {"tokens": jnp.asarray(src.batch_at(99_999)["tokens"])}
+    dense_ce = FR.eval_budget_loss(dense, cfg, infos, tdev, eval_batch,
+                                   table.table.shape[0] - 1) if False else None
+    from repro.core.distill import cross_entropy
+    base_ce = float(cross_entropy(
+        T.forward(dense, cfg, eval_batch["tokens"][:, :-1])[0],
+        eval_batch["tokens"][:, 1:]))
+    print(f"\nbase model CE: {base_ce:.4f}")
+    print(f"{'budget':>8} {'params':>12} {'CE':>8}")
+    for k in range(table.table.shape[0]):
+        ce = FR.eval_budget_loss(fact, cfg, infos, tdev, eval_batch, k)
+        n = FR.deployed_param_count(cfg, infos, table, k)
+        print(f"{table.budgets[min(k, len(table.budgets)-1)]:>8.2f} {n:>12,} {ce:>8.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Serve one elastic model at mixed per-request budgets (batched engine).
+
+  PYTHONPATH=src python examples/elastic_serving.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "gpt2-small", "--smoke", "--requests", "6",
+          "--budgets", "0.4,0.7,1.0", "--max-new", "8"])

@@ -1,0 +1,25 @@
+"""Drive the multi-pod dry-run for one cell and pretty-print the roofline.
+
+  PYTHONPATH=src python examples/multipod_dryrun.py --arch deepseek-7b \
+      --shape train_4k --mesh multi
+"""
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="multi")
+    args = ap.parse_args()
+    # the 512-device flag must precede jax import -> delegate to dryrun module
+    from repro.launch import dryrun as DR
+    rec = DR.run_cell(args.arch, args.shape, multi_pod=args.mesh == "multi",
+                      mode="dense", out_dir=None)
+    print(json.dumps({k: v for k, v in rec.items() if k != "traceback"},
+                     indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

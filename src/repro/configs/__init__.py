@@ -1,0 +1,47 @@
+"""Architecture registry: --arch <id> resolution for launchers and tests."""
+from typing import Dict, List, Tuple
+
+from repro.configs.base import (LM_SHAPES, LONG_CONTEXT_ARCHS, FlexRankConfig,
+                                MLAConfig, ModelConfig, MoEConfig, RWKVConfig,
+                                SSMConfig, Segment, ShapeConfig)
+
+from repro.configs import (deepseek_7b, deepseek_moe_16b, gemma3_27b,
+                           gpt2_small, llama4_scout_17b_a16e,
+                           llama_3_2_vision_11b, minicpm3_4b, rwkv6_3b,
+                           seamless_m4t_medium, stablelm_1_6b, zamba2_7b)
+
+_MODULES = {
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e,
+    "deepseek-moe-16b": deepseek_moe_16b,
+    "stablelm-1.6b": stablelm_1_6b,
+    "minicpm3-4b": minicpm3_4b,
+    "gemma3-27b": gemma3_27b,
+    "deepseek-7b": deepseek_7b,
+    "zamba2-7b": zamba2_7b,
+    "seamless-m4t-medium": seamless_m4t_medium,
+    "llama-3.2-vision-11b": llama_3_2_vision_11b,
+    "rwkv6-3b": rwkv6_3b,
+    "gpt2-small": gpt2_small,
+}
+
+ASSIGNED_ARCHS: Tuple[str, ...] = tuple(k for k in _MODULES if k != "gpt2-small")
+
+
+def get_config(name: str, *, smoke: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return _MODULES[name].SMOKE if smoke else _MODULES[name].CONFIG
+
+
+def list_archs() -> List[str]:
+    return sorted(_MODULES)
+
+
+def shapes_for(name: str) -> List[ShapeConfig]:
+    """Assigned shape cells for an arch, applying the long_500k skip rule."""
+    out = []
+    for s in LM_SHAPES:
+        if s.name == "long_500k" and name not in LONG_CONTEXT_ARCHS:
+            continue
+        out.append(s)
+    return out

@@ -1,0 +1,34 @@
+"""FlexRank core: the paper's contribution as composable JAX pieces.
+
+Pipeline (paper Algorithm 1):
+  1. covariance + datasvd   -> per-layer importance-ordered factors
+  2. dp_select              -> nested Pareto-front rank profiles
+  3. profiles + distill     -> stochastic nested-mask consolidation training
+  4. gar                    -> deploy-time gauge-aligned reparametrization
+"""
+from repro.core.covariance import CovarianceState, accumulate, sqrt_and_inv_sqrt
+from repro.core.datasvd import (Factors, datasvd_factors, plain_svd_factors,
+                                reconstruction_error, truncation_error_curve)
+from repro.core.dp_select import (LayerCandidate, Profile, brute_force_selection,
+                                  dp_rank_selection, make_layer_candidates,
+                                  select_profiles)
+from repro.core.gar import (GarFactors, dense_flops, gar_apply, gar_flops,
+                            gar_transform, lowrank_flops)
+from repro.core.profiles import (ProfileTable, masks_for_index, profile_param_cost,
+                                 rank_mask, rank_slice, sample_profile_index,
+                                 table_from_profiles, uniform_table)
+from repro.core.distill import (consolidation_loss, cross_entropy, feature_match,
+                                kl_distill)
+
+__all__ = [
+    "CovarianceState", "accumulate", "sqrt_and_inv_sqrt",
+    "Factors", "datasvd_factors", "plain_svd_factors", "reconstruction_error",
+    "truncation_error_curve",
+    "LayerCandidate", "Profile", "brute_force_selection", "dp_rank_selection",
+    "make_layer_candidates", "select_profiles",
+    "GarFactors", "gar_apply", "gar_flops", "gar_transform", "lowrank_flops",
+    "dense_flops",
+    "ProfileTable", "masks_for_index", "profile_param_cost", "rank_mask",
+    "rank_slice", "sample_profile_index", "table_from_profiles", "uniform_table",
+    "consolidation_loss", "cross_entropy", "feature_match", "kl_distill",
+]

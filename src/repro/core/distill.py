@@ -1,0 +1,74 @@
+"""Knowledge-consolidation losses (paper §3.3).
+
+The elastic submodels are trained against the frozen base model's logits —
+the paper argues teacher logits are a richer signal than labels when a strong
+pretrained model exists. We provide the standard KD mixture:
+
+    L = lambda_kd * T^2 * KL(softmax(t/T) || softmax(s/T))
+      + (1 - lambda_kd) * CE(labels, s)
+
+plus an optional feature-matching term (the paper notes classification-head
+distillation can be swapped for feature matching in the ViT setting).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def kl_distill(student_logits: Array, teacher_logits: Array, *, temperature: float = 1.0,
+               mask: Optional[Array] = None) -> Array:
+    """Token-mean KL(teacher || student) with temperature scaling.
+
+    logits: (..., vocab). ``mask``: (...,) 0/1 validity (padding) weights.
+    """
+    t = temperature
+    s_log = jax.nn.log_softmax(student_logits / t, axis=-1)
+    t_log = jax.nn.log_softmax(jax.lax.stop_gradient(teacher_logits) / t, axis=-1)
+    t_prob = jnp.exp(t_log)
+    per_tok = jnp.sum(t_prob * (t_log - s_log), axis=-1) * (t * t)
+    if mask is None:
+        return jnp.mean(per_tok)
+    mask = mask.astype(per_tok.dtype)
+    return jnp.sum(per_tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def cross_entropy(logits: Array, labels: Array, *, mask: Optional[Array] = None) -> Array:
+    """Mean next-token CE. labels: int (...,); logits: (..., vocab)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(ll.dtype)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def consolidation_loss(
+    student_logits: Array,
+    teacher_logits: Array,
+    labels: Array,
+    *,
+    kd_weight: float = 1.0,
+    temperature: float = 1.0,
+    mask: Optional[Array] = None,
+) -> Array:
+    """Paper Eq. (5) instantiation. kd_weight=1.0 reproduces pure-KD training."""
+    loss = kd_weight * kl_distill(student_logits, teacher_logits,
+                                  temperature=temperature, mask=mask)
+    if kd_weight < 1.0:
+        loss = loss + (1.0 - kd_weight) * cross_entropy(logits=student_logits, labels=labels, mask=mask)
+    return loss
+
+
+def feature_match(student_feats: Array, teacher_feats: Array, *, mask: Optional[Array] = None) -> Array:
+    """Mean-squared feature matching (optional auxiliary term)."""
+    d = student_feats - jax.lax.stop_gradient(teacher_feats)
+    per_tok = jnp.mean(d * d, axis=-1)
+    if mask is None:
+        return jnp.mean(per_tok)
+    mask = mask.astype(per_tok.dtype)
+    return jnp.sum(per_tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)

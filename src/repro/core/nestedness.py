@@ -1,0 +1,157 @@
+"""PTS / ASL / NSL training strategies on the linear model (paper §4, Fig. 2).
+
+This is the paper's controlled setting: a linear model ``M = U V^T`` fitted to
+a target ``M*`` with decaying singular values. The three objectives:
+
+  PTS  — train only the full model,              Eq. (10)
+  ASL  — average over *all* column subsets,      Eq. (11) (via the Bernoulli
+         rank-dropout identity of Lemma B.4, so the 2^k sum is O(k))
+  NSL  — average over *prefix* subsets only,     Eq. (12)
+
+and the best-submodel optimality gap ``E(U, V, r)`` of Eq. (9) against the
+Eckart–Young truncations ``A_r``. Used by tests (Thms 4.1–4.3 become
+assertions) and by ``benchmarks/nestedness.py`` (Fig. 2 reproduction).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import NamedTuple, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class LinearElastic(NamedTuple):
+    u: Array  # (m, k)
+    v: Array  # (n, k)
+
+
+def make_target(rng: np.random.Generator, m: int, n: int, *, decay: float = 1.2) -> np.ndarray:
+    """Random M* with power-law singular values (paper App. D.1)."""
+    k = min(m, n)
+    a = rng.standard_normal((m, m))
+    b = rng.standard_normal((n, n))
+    p, _ = np.linalg.qr(a)
+    q, _ = np.linalg.qr(b)
+    sig = np.power(np.arange(1, k + 1, dtype=np.float64), -decay)
+    sig = sig / sig[0]
+    return (p[:, :k] * sig[None, :]) @ q[:, :k].T
+
+
+def svd_truncations(m_star: np.ndarray) -> np.ndarray:
+    """Stack of Eckart–Young optima A_r, r = 1..k — the true Pareto front."""
+    p, s, qt = np.linalg.svd(m_star, full_matrices=False)
+    k = s.shape[0]
+    outs = []
+    for r in range(1, k + 1):
+        outs.append((p[:, :r] * s[:r][None, :]) @ qt[:r, :])
+    return np.stack(outs)
+
+
+# ------------------------------- objectives --------------------------------
+
+def pts_loss(params: LinearElastic, m_star: Array) -> Array:
+    diff = params.u @ params.v.T - m_star
+    return jnp.sum(diff * diff)
+
+
+def asl_loss(params: LinearElastic, m_star: Array) -> Array:
+    """Closed-form expectation over uniform subsets (Lemma B.4).
+
+    E_z ||U Pi_z V^T - M*||^2 = 1/4||UV^T - 2M*||^2 + 1/4 sum_j |u_j|^2|v_j|^2
+    (up to the empty-mask shift of Lemma B.3, which doesn't move minimizers).
+    """
+    u, v = params
+    w = u @ v.T
+    quad = jnp.sum((w - 2.0 * m_star) ** 2)
+    col = jnp.sum(jnp.sum(u * u, axis=0) * jnp.sum(v * v, axis=0))
+    return 0.25 * (quad + col)
+
+
+def nsl_loss(params: LinearElastic, m_star: Array) -> Array:
+    """1/k sum_r ||U Pi_[r] V^T - M*||^2 computed in O(k) matmuls via cumsum."""
+    u, v = params
+    k = u.shape[1]
+    # rank-1 increments stacked: outer_j = u_j v_j^T ; prefix sums give U Pi_[r] V^T
+    outers = jnp.einsum("mj,nj->jmn", u, v)
+    prefixes = jnp.cumsum(outers, axis=0)  # (k, m, n)
+    diffs = prefixes - m_star[None]
+    return jnp.mean(jnp.sum(diffs * diffs, axis=(1, 2)))
+
+
+def train(
+    loss_fn,
+    m_star: np.ndarray,
+    *,
+    steps: int = 2000,
+    lr: float = 2e-2,
+    seed: int = 0,
+    init_scale: float = 0.3,
+) -> LinearElastic:
+    """Full-batch Adam on one of the three objectives."""
+    m, n = m_star.shape
+    k = min(m, n)
+    rng = jax.random.PRNGKey(seed)
+    ru, rv = jax.random.split(rng)
+    params = LinearElastic(
+        u=init_scale * jax.random.normal(ru, (m, k)),
+        v=init_scale * jax.random.normal(rv, (n, k)),
+    )
+    target = jnp.asarray(m_star, jnp.float32)
+
+    # minimal Adam (self-contained: core must not depend on repro.optim)
+    mom = jax.tree.map(jnp.zeros_like, params)
+    var = jax.tree.map(jnp.zeros_like, params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def step(carry, t):
+        params, mom, var = carry
+        g = jax.grad(lambda p: loss_fn(p, target))(params)
+        mom = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, mom, g)
+        var = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, var, g)
+        t1 = t + 1
+        mhat = jax.tree.map(lambda a: a / (1 - b1 ** t1), mom)
+        vhat = jax.tree.map(lambda a: a / (1 - b2 ** t1), var)
+        params = jax.tree.map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps), params, mhat, vhat)
+        return (params, mom, var), loss_fn(params, target)
+
+    (params, _, _), _ = jax.lax.scan(step, (params, mom, var), jnp.arange(steps, dtype=jnp.float32))
+    return params
+
+
+# ------------------------------ gap evaluation ------------------------------
+
+def best_submodel_gap(params: LinearElastic, m_star: np.ndarray, r: int, *, exhaustive_limit: int = 16) -> float:
+    """E(U, V, r): min over |S|=r column subsets of ||U Pi_S V^T - A_r||_F^2.
+
+    Exhaustive for k <= exhaustive_limit, else greedy forward selection
+    (sufficient for the benchmark plots; tests use small k).
+    """
+    u = np.asarray(params.u, np.float64)
+    v = np.asarray(params.v, np.float64)
+    k = u.shape[1]
+    a_r = svd_truncations(m_star)[r - 1]
+
+    def err(subset) -> float:
+        idx = list(subset)
+        w = u[:, idx] @ v[:, idx].T
+        return float(np.sum((w - a_r) ** 2))
+
+    if k <= exhaustive_limit:
+        return min(err(s) for s in itertools.combinations(range(k), r))
+    chosen: Tuple[int, ...] = ()
+    remaining = set(range(k))
+    for _ in range(r):
+        best = min(remaining, key=lambda j: err(chosen + (j,)))
+        chosen += (best,)
+        remaining.discard(best)
+    return err(chosen)
+
+
+def pareto_gaps(params: LinearElastic, m_star: np.ndarray) -> np.ndarray:
+    k = min(m_star.shape)
+    return np.asarray([best_submodel_gap(params, m_star, r) for r in range(1, k + 1)])

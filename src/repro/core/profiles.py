@@ -1,0 +1,120 @@
+"""Nested rank profiles: the bridge between DP output and jit-able training.
+
+A *profile table* is an int32 array ``(K, L)`` — for each of K nested budgets,
+the retained rank of each of L factorized layer groups. Nestedness
+(``table[k-1] <= table[k]`` componentwise) is certified at construction.
+
+During knowledge consolidation (paper §3.3) a profile index is sampled each
+step; the ranks are turned into 0/1 column masks (``iota < r``) applied to the
+factor columns. Masks keep all shapes static, so one compiled train step
+serves every budget — this is the paper-faithful scheme (and its documented
+~2x training overhead). ``rank_slice`` implements the beyond-paper
+alternative: a train step *specialized* to one budget via static slicing, so
+compiled FLOPs scale with the active rank (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.dp_select import Profile
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileTable:
+    """K nested budget profiles over named layer groups."""
+
+    layer_names: Tuple[str, ...]
+    table: np.ndarray            # (K, L) int32, nested: rows ascending
+    budgets: Tuple[float, ...]   # relative sizes, ascending, len K
+    max_ranks: Tuple[int, ...]   # (L,) full rank per layer group
+
+    def __post_init__(self):
+        t = self.table
+        assert t.ndim == 2 and t.shape[1] == len(self.layer_names)
+        assert np.all(np.diff(t, axis=0) >= 0), "profiles must be nested"
+        assert np.all(t[-1] <= np.asarray(self.max_ranks)), "rank exceeds max"
+        assert np.all(t >= 1), "every layer keeps at least rank 1"
+
+    @property
+    def num_budgets(self) -> int:
+        return self.table.shape[0]
+
+    def ranks_for(self, k: int) -> Dict[str, int]:
+        return dict(zip(self.layer_names, self.table[k].tolist()))
+
+
+def table_from_profiles(
+    layer_names: Sequence[str],
+    profiles: Sequence[Profile],
+    budgets: Sequence[float],
+    max_ranks: Sequence[int],
+) -> ProfileTable:
+    """Assemble a ProfileTable from DP ``Profile``s (already nested-chained)."""
+    rows = sorted(profiles, key=lambda p: sum(p.ranks))
+    table = np.asarray([p.ranks for p in rows], np.int32)
+    return ProfileTable(
+        layer_names=tuple(layer_names),
+        table=table,
+        budgets=tuple(budgets),
+        max_ranks=tuple(int(r) for r in max_ranks),
+    )
+
+
+def uniform_table(
+    layer_names: Sequence[str],
+    max_ranks: Sequence[int],
+    budgets: Sequence[float],
+) -> ProfileTable:
+    """Baseline: same relative rank everywhere (no DP). Used for ablations."""
+    rows = []
+    for b in budgets:
+        rows.append([max(1, int(round(b * r))) for r in max_ranks])
+    table = np.asarray(rows, np.int32)
+    table = np.maximum.accumulate(table, axis=0)  # enforce nestedness
+    return ProfileTable(tuple(layer_names), table, tuple(budgets), tuple(int(r) for r in max_ranks))
+
+
+# ---------------------------------------------------------------------------
+# jit-side helpers
+# ---------------------------------------------------------------------------
+
+def rank_mask(rank: Array | int, full_rank: int, dtype=jnp.float32) -> Array:
+    """0/1 mask over rank columns: mask[i] = 1 iff i < rank. Shape-static."""
+    return (jnp.arange(full_rank) < rank).astype(dtype)
+
+
+def sample_profile_index(rng: Array, num_budgets: int, weights: Sequence[float] | None = None) -> Array:
+    """Sample budget index k ~ alpha (paper Eq. 6 sampling)."""
+    if weights is None:
+        return jax.random.randint(rng, (), 0, num_budgets)
+    p = jnp.asarray(weights, jnp.float32)
+    p = p / jnp.sum(p)
+    return jax.random.choice(rng, num_budgets, p=p)
+
+
+def masks_for_index(table: Array, k: Array, max_ranks: Sequence[int]) -> List[Array]:
+    """Per-layer-group masks for (traced) budget index ``k``.
+
+    ``table`` is the (K, L) int32 ranks as a device array; the returned masks
+    have static shapes (full_rank_l,) and traced values.
+    """
+    ranks = table[k]  # (L,)
+    return [rank_mask(ranks[l], full) for l, full in enumerate(max_ranks)]
+
+
+def rank_slice(u: Array, v: Array, rank: int) -> Tuple[Array, Array]:
+    """Static truncation (beyond-paper specialized step / deployment path)."""
+    return u[..., :rank], v[..., :rank]
+
+
+def profile_param_cost(table: ProfileTable, costs_per_rank: Sequence[float]) -> np.ndarray:
+    """Retained factor parameters per budget row: sum_l r_{k,l} * (m_l + n_l)."""
+    c = np.asarray(costs_per_rank, np.float64)
+    return (table.table.astype(np.float64) * c[None, :]).sum(axis=1)

@@ -1,0 +1,5 @@
+"""Data substrate: synthetic + memmap token pipelines."""
+from repro.data.pipeline import (MemmapTokens, SyntheticTokens,
+                                 calibration_batches, host_batch_slice,
+                                 make_source)
+

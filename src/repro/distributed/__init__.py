@@ -1,0 +1,9 @@
+"""Distributed runtime: mesh context, sharding rules, fault tolerance."""
+from repro.distributed.meshctx import (constrain, data_axes, get_current_mesh,
+                                       logical_to_spec, mesh_context,
+                                       set_current_mesh)
+from repro.distributed.sharding import (PreemptionGuard, StragglerMonitor,
+                                        batch_sharding, batch_spec,
+                                        elastic_remesh, param_shardings,
+                                        replicated)
+

@@ -1,0 +1,103 @@
+"""Process-global mesh context + activation sharding constraints.
+
+Model code calls ``constrain(x, "batch", None, "heads")`` with *logical* axis
+names; when a mesh is active (set by the launcher / dry-run) these become
+``with_sharding_constraint`` with the physical PartitionSpec, otherwise they
+are no-ops — so smoke tests on one CPU device run the identical model code.
+
+Logical -> physical mapping:
+  batch   -> all data-like mesh axes present ('pod', 'data')
+  seq     -> 'data'  (sequence sharding for batch=1 long-context decode)
+  heads/kv_heads/mlp/vocab/experts/rank -> 'model'
+  anything else -> replicated
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+MODEL_AXES = ("heads", "kv_heads", "mlp", "vocab", "experts", "rank", "sp")
+
+
+def set_current_mesh(mesh: Optional[Mesh]) -> None:
+    _STATE.mesh = mesh
+
+
+def get_current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh]):
+    prev = get_current_mesh()
+    set_current_mesh(mesh)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        set_current_mesh(prev)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def logical_to_spec(mesh: Mesh, axes: Sequence[Optional[str]]) -> P:
+    """Map logical axis names to a physical PartitionSpec (conflict-free).
+
+    A mesh axis may appear at most once in a PartitionSpec; later logical
+    axes that would reuse an already-assigned mesh axis are replicated
+    instead (this is what makes factorized (out, rank) leaves come out as
+    Megatron-like row/col sharding — see DESIGN.md §3).
+    """
+    used = set()
+    out = []
+    for name in axes:
+        phys: Optional[object] = None
+        if name == "batch":
+            d = tuple(a for a in data_axes(mesh) if a not in used)
+            if d:
+                phys = d if len(d) > 1 else d[0]
+                used.update(d)
+        elif name == "seq":
+            if "data" not in used and "data" in mesh.axis_names:
+                phys = "data"
+                used.add("data")
+        elif name in MODEL_AXES:
+            if "model" not in used and "model" in mesh.axis_names:
+                phys = "model"
+                used.add("model")
+        out.append(phys)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Sharding-constrain ``x`` by logical axis names; no-op without a mesh.
+
+    Divisibility guard: a dim that doesn't divide by its mesh axes is
+    replicated instead (e.g. 'sp' sequence sharding silently turns off for
+    decode's S=1).
+    """
+    mesh = get_current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(mesh, axes)
+    fixed = []
+    for dim, entry in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if entry is None:
+            fixed.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        size = int(np.prod([mesh.shape[nm] for nm in names]))
+        fixed.append(entry if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))

@@ -1,0 +1,178 @@
+"""Param/batch sharding derivation + runtime fault-tolerance utilities.
+
+``param_shardings`` maps the model's logical-axes tree (models.common
+``axes_tree``) to physical NamedShardings via meshctx.logical_to_spec — one
+place where the DP/TP(+EP) layout policy lives, so hillclimbing a sharding
+change is a one-line edit recorded in EXPERIMENTS.md §Perf.
+
+Also here: the step-time straggler monitor and preemption-aware step guard
+used by launch/train.py (SIGTERM -> finish step -> checkpoint -> exit), and
+elastic re-mesh helpers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.meshctx import data_axes, logical_to_spec
+
+PyTree = Any
+
+
+def _is_axes_leaf(x) -> bool:
+    """A logical-axes tuple: plain tuple of axis names / None. NamedTuples
+    (e.g. AdamWState) are containers, not leaves."""
+    return (isinstance(x, tuple) and not hasattr(x, "_fields")
+            and all(e is None or isinstance(e, str) for e in x))
+
+
+def param_shardings(mesh: Mesh, axes: PyTree, shapes: PyTree = None,
+                    *, fsdp: bool = False) -> PyTree:
+    """NamedShardings for a logical-axes tree (leaves = tuples of names).
+
+    When ``shapes`` (a matching tree of shape tuples / ShapeDtypeStructs /
+    ParamSpecs) is given, dims that don't divide their mesh axes are
+    replicated instead — e.g. vocab=73448 on a 16-way 'model' axis.
+
+    ``fsdp=True`` additionally shards one remaining replicated dim of every
+    >=2D leaf over the data axes (ZeRO-3 layout): params/optimizer memory
+    scales with the full chip count; XLA inserts per-layer param all-gathers.
+    """
+    d_axes = data_axes(mesh)
+    d_entry = d_axes if len(d_axes) > 1 else (d_axes[0] if d_axes else None)
+    d_size = int(np.prod([mesh.shape[a] for a in d_axes])) if d_axes else 1
+
+    def spec_of(a, shape=None):
+        p = logical_to_spec(mesh, a)
+        if shape is None:
+            return NamedSharding(mesh, p)
+        dims = getattr(shape, "shape", shape)
+        fixed = []
+        for d, entry in zip(dims, tuple(p) + (None,) * (len(dims) - len(p))):
+            if entry is None:
+                fixed.append(None)
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            size = int(np.prod([mesh.shape[nm] for nm in names]))
+            fixed.append(entry if d % size == 0 else None)
+        if fsdp and d_entry is not None and len(dims) >= 2:
+            # shard the largest still-replicated dim over the data axes;
+            # skip scanned 'layers' leading dims (axes name bookkeeping: we
+            # only know sizes here, so prefer the last replicated dim)
+            for i in range(len(dims) - 1, -1, -1):
+                if fixed[i] is None and dims[i] % d_size == 0 and dims[i] >= d_size:
+                    fixed[i] = d_entry
+                    break
+        from jax.sharding import PartitionSpec as P
+        return NamedSharding(mesh, P(*fixed))
+
+    if shapes is None:
+        return jax.tree.map(spec_of, axes, is_leaf=_is_axes_leaf)
+    shape_leaves = jax.tree.leaves(
+        shapes, is_leaf=lambda x: hasattr(x, "shape") or (isinstance(x, tuple) and all(isinstance(i, int) for i in x)))
+    axes_leaves, treedef = jax.tree.flatten(axes, is_leaf=_is_axes_leaf)
+    assert len(shape_leaves) == len(axes_leaves), (len(shape_leaves), len(axes_leaves))
+    return jax.tree.unflatten(treedef, [spec_of(a, s) for a, s in zip(axes_leaves, shape_leaves)])
+
+
+def batch_spec(mesh: Mesh, *, extra_dims: int = 1) -> P:
+    """(B, S, ...) batch arrays: batch dim over all data-like axes."""
+    d = data_axes(mesh)
+    lead = d if len(d) > 1 else (d[0] if d else None)
+    return P(lead, *([None] * extra_dims))
+
+
+def batch_sharding(mesh: Mesh, *, extra_dims: int = 1) -> NamedSharding:
+    return NamedSharding(mesh, batch_spec(mesh, extra_dims=extra_dims))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def seq_sharded_cache(mesh: Mesh, *, time_axis: int, ndim: int) -> NamedSharding:
+    """KV-cache sharding for batch=1 long-context decode: shard sequence."""
+    spec: List[Optional[str]] = [None] * ndim
+    if "data" in mesh.axis_names:
+        spec[time_axis] = "data"
+    return NamedSharding(mesh, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance / elasticity runtime
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Rolling step-time tracker; flags outlier steps (straggling hosts show
+    up as slow collective completion on every peer, so each host can detect
+    locally) and exposes the signal used to trigger re-mesh or hot-spare
+    swap-in by the cluster controller."""
+
+    window: int = 50
+    threshold: float = 2.0
+    _times: List[float] = dataclasses.field(default_factory=list)
+
+    def record(self, seconds: float) -> bool:
+        """Record one step; returns True if this step was a straggler event."""
+        self._times.append(seconds)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        if len(self._times) < 8:
+            return False
+        med = float(np.median(self._times))
+        return seconds > self.threshold * med
+
+    @property
+    def median(self) -> float:
+        return float(np.median(self._times)) if self._times else 0.0
+
+
+class PreemptionGuard:
+    """SIGTERM/SIGINT -> set flag; training loop checkpoints and exits
+    cleanly at the next step boundary (TPU preemption semantics)."""
+
+    def __init__(self, signals: Sequence[int] = (signal.SIGTERM,)):
+        self.requested = False
+        self._prev = {}
+        for s in signals:
+            try:
+                self._prev[s] = signal.signal(s, self._handler)
+            except (ValueError, OSError):
+                pass  # not main thread / unsupported
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def restore(self):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+
+
+def elastic_remesh(preferred_shape: Sequence[int], axis_names: Sequence[str],
+                   *, devices: Optional[List] = None) -> Mesh:
+    """Build the largest mesh of the preferred shape that current devices
+    support; shrinks the leading (data-like) axis on device loss so a job
+    restarted after losing a pod slice keeps running (elastic scaling).
+    """
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    shape = list(preferred_shape)
+    model = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+    assert n % model == 0, f"{n} devices cannot host model dim {model}"
+    shape[0] = n // model
+    devs = np.asarray(devices[: int(np.prod(shape))]).reshape(shape)
+    return Mesh(devs, tuple(axis_names))
+
+
+def timed_step(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0

@@ -1,0 +1,85 @@
+"""Fused GAR low-rank forward kernel (paper §3.5 + App. D.4).
+
+Computes, for GAR factors (v_tilde (n, r), u_hat (m-r, r)) and x (T, n):
+
+    z    = x @ v_tilde            (T, r)      — also the first r outputs
+    tail = z @ u_hat^T            (T, m-r)
+
+in ONE pallas_call so ``z`` never round-trips through HBM — exactly the fusion
+the paper says recovers the memory-bound factorized forward (App. D.4), and
+the identity block costs zero FLOPs (it *is* the z output).
+
+TPU tiling: grid (T/bt, r/br). Per step the MXU sees (bt x n)·(n x br) and
+(bt x br)·(br x (m-r)) matmuls with every dim a multiple of 128 when the
+caller pads (ops.py handles padding). ``tail`` is accumulated across the r
+axis of the grid — TPU grids are sequential, so revisiting the same output
+block with ``+=`` is the standard reduction pattern.
+
+VMEM budget per step (bt=256, br=256, n=m=5120, bf16):
+  x 2.6MB + v 2.6MB + u_hat 2.6MB + z 0.13MB + tail-accum (fp32) 5MB ~= 13MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BT = 256
+DEFAULT_BR = 256
+
+
+def _kernel(x_ref, v_ref, u_ref, z_ref, tail_ref, *, nr: int):
+    j = pl.program_id(1)
+    x = x_ref[...]
+    v = v_ref[...]
+    z = jnp.dot(x, v, preferred_element_type=jnp.float32)
+    z_ref[...] = z.astype(z_ref.dtype)
+    u = u_ref[...]
+    partial = jnp.dot(z.astype(x.dtype), u.T, preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        tail_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _acc():
+        tail_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "br", "interpret"))
+def gar_matmul(x: jax.Array, v_tilde: jax.Array, u_hat: jax.Array, *,
+               bt: int = DEFAULT_BT, br: int = DEFAULT_BR,
+               interpret: bool = False):
+    """Returns (z (T, r), tail (T, m-r)). Caller applies output permutation.
+
+    Requires T % bt == 0, r % br == 0 (ops.py pads); n, m-r unconstrained
+    (kept whole per tile).
+    """
+    t, n = x.shape
+    r = v_tilde.shape[1]
+    m_tail = u_hat.shape[0]
+    assert t % bt == 0 and r % br == 0, (t, bt, r, br)
+    nt, nr = t // bt, r // br
+
+    grid = (nt, nr)
+    z, tail = pl.pallas_call(
+        functools.partial(_kernel, nr=nr),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, br), lambda i, j: (0, j)),
+            pl.BlockSpec((m_tail, br), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, br), lambda i, j: (i, j)),
+            pl.BlockSpec((bt, m_tail), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, r), x.dtype),
+            jax.ShapeDtypeStruct((t, m_tail), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, v_tilde, u_hat)
+    return z, tail.astype(x.dtype)

@@ -1,0 +1,72 @@
+"""Fused naive low-rank forward: y = (x @ v) @ u^T in one pallas_call.
+
+The training-path analogue of gar_matmul (factors in paper (U, V) form,
+z (T, r) stays in VMEM). Supports the nested rank *mask* (paper §3.3): a
+traced ``rank`` scalar zeroes z columns >= rank inside the kernel, so the
+stochastic-budget training step needs no extra memory traffic for masking.
+
+Grid (T/bt, r/br): y is accumulated over the r grid axis (sequential TPU
+grid, revisit-accumulate). Masked r-blocks still run (static shapes) — this
+is the paper's documented ~2x training overhead; the *deploy* path uses
+gar_matmul with statically sliced ranks instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BT = 256
+DEFAULT_BR = 256
+
+
+def _kernel(rank_ref, x_ref, v_ref, u_ref, y_ref, *, br: int):
+    j = pl.program_id(1)
+    x = x_ref[...]
+    v = v_ref[...]
+    z = jnp.dot(x, v, preferred_element_type=jnp.float32)
+    col = j * br + jax.lax.broadcasted_iota(jnp.int32, (1, br), 1)
+    mask = (col < rank_ref[0]).astype(z.dtype)
+    z = z * mask
+    u = u_ref[...]
+    partial = jnp.dot(z.astype(x.dtype), u.T, preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _acc():
+        y_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "br", "interpret"))
+def lowrank_matmul(x: jax.Array, v: jax.Array, u: jax.Array,
+                   rank: jax.Array | int | None = None, *,
+                   bt: int = DEFAULT_BT, br: int = DEFAULT_BR,
+                   interpret: bool = False) -> jax.Array:
+    """y = (x @ v) * mask(rank) @ u^T.  x: (T, n); v: (n, r); u: (m, r)."""
+    t, n = x.shape
+    r = v.shape[1]
+    m = u.shape[0]
+    assert t % bt == 0 and r % br == 0, (t, bt, r, br)
+    if rank is None:
+        rank = r
+    rank_arr = jnp.asarray(rank, jnp.int32).reshape(1)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, br=br),
+        grid=(t // bt, r // br),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY) if False else pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bt, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, br), lambda i, j: (0, j)),
+            pl.BlockSpec((m, br), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, m), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, m), jnp.float32),
+        interpret=interpret,
+    )(rank_arr, x, v, u)
+    return y.astype(x.dtype)

@@ -1,0 +1,78 @@
+"""Mamba2 SSD chunked-scan Pallas kernel.
+
+One (batch, head) per grid row, chunks sequential along the second grid axis,
+(N, P) recurrent state in persistent VMEM scratch. Math matches
+models.ssm.ssd_chunked (the ref oracle): intra-chunk lower-triangular decay
+"attention" + inter-chunk decayed state contribution + state update.
+
+Block shapes (Q=128, N=64, P=64): l_mat (Q, Q) is 64 KB; matmuls are
+(Q x N)(N x Q) and (Q x Q)(Q x P) MXU tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *, q: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, 1)
+    a = a_ref[0, 0]                           # () decay rate (negative)
+    b = b_ref[0].astype(jnp.float32)          # (Q, N)
+    c = c_ref[0].astype(jnp.float32)          # (Q, N)
+    state = state_ref[...]                    # (N, P)
+
+    da = dt[:, 0] * a                         # (Q,)
+    cum = jnp.cumsum(da)                      # inclusive
+    xdt = x * dt
+    rel = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    l_mat = jnp.where(ii >= jj, jnp.exp(rel), 0.0)
+    scores = c @ b.T                          # (Q, Q)
+    y = (scores * l_mat) @ xdt
+    y = y + (c * jnp.exp(cum)[:, None]) @ state
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    to_end = jnp.exp(cum[-1] - cum)           # (Q,)
+    s_c = (b * to_end[:, None]).T @ xdt       # (N, P)
+    state_ref[...] = state * jnp.exp(cum[-1]) + s_c
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+        *, chunk: int = 128, interpret: bool = False) -> jax.Array:
+    """x: (BH, S, P); dt: (BH, S); a: (BH,); b, c: (BH, S, N) — flattened
+    over (batch, head) with B/C groups pre-broadcast. Returns y (BH, S, P)."""
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    dt3 = dt[..., None]
+    a2 = a.reshape(bh, 1)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, q=chunk),
+        grid=(bh, s // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt3, a2, b, c)
+    return y

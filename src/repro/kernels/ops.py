@@ -1,0 +1,123 @@
+"""jit'd public wrappers around the Pallas kernels: padding to tile-aligned
+shapes, (B, S, ...) <-> kernel layout reshapes, output permutation for GAR.
+
+``use_pallas`` dispatch: True on TPU (real kernels), 'interpret' for CPU
+validation, False -> pure-jnp oracle path (identical numerics guaranteed by
+tests/test_kernels.py sweeps).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.gar_matmul import gar_matmul
+from repro.kernels.lowrank_matmul import lowrank_matmul
+from repro.kernels.mamba2_ssd import ssd
+from repro.kernels.rwkv6_wkv import wkv6
+
+
+def _mode(use_pallas):
+    if use_pallas == "interpret":
+        return True, True
+    return bool(use_pallas), False
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, size
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, pad)
+    return jnp.pad(x, width), size
+
+
+def gar_forward(x: jax.Array, v_tilde: jax.Array, u_hat: jax.Array,
+                perm_inv: jax.Array, *, use_pallas=False,
+                bt: int = 256, br: int = 256) -> jax.Array:
+    """Full GAR linear: y = P^{-1} [z ; z @ u_hat^T], x: (..., n)."""
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    xf = x.reshape(-1, n)
+    run, interp = _mode(use_pallas)
+    if u_hat.shape[0] == 0:
+        # degenerate full-rank GAR: the identity block IS the whole output
+        y = jnp.take(xf @ v_tilde.astype(x.dtype), perm_inv, axis=-1)
+        return y.reshape(*lead, -1)
+    if run:
+        xf_p, t0 = _pad_to(xf, bt, 0)
+        v_p, r0 = _pad_to(v_tilde, br, 1)
+        u_p, _ = _pad_to(u_hat, br, 1)
+        z, tail = gar_matmul(xf_p, v_p, u_p, bt=bt, br=min(br, v_p.shape[1]),
+                             interpret=interp)
+        z, tail = z[:t0, :r0], tail[:t0]
+    else:
+        z, tail = ref.gar_matmul_ref(xf, v_tilde, u_hat)
+    y = jnp.concatenate([z.astype(x.dtype), tail.astype(x.dtype)], axis=-1)
+    y = jnp.take(y, perm_inv, axis=-1)
+    return y.reshape(*lead, -1)
+
+
+def lowrank_forward(x: jax.Array, v: jax.Array, u: jax.Array,
+                    rank=None, *, use_pallas=False,
+                    bt: int = 256, br: int = 256) -> jax.Array:
+    """Masked low-rank linear (training path). x: (..., n) -> (..., m)."""
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    run, interp = _mode(use_pallas)
+    if run:
+        xf_p, t0 = _pad_to(xf, bt, 0)
+        v_p, _ = _pad_to(v, br, 1)
+        u_p, _ = _pad_to(u, br, 1)
+        y = lowrank_matmul(xf_p, v_p, u_p, rank if rank is not None else v.shape[1],
+                           bt=bt, br=min(br, v_p.shape[1]), interpret=interp)
+        y = y[:t0]
+    else:
+        y = ref.lowrank_matmul_ref(xf, v, u, rank)
+    return y.astype(x.dtype).reshape(*lead, -1)
+
+
+def wkv6_forward(r, k, v, w, u, *, chunk: int = 64, use_pallas=False):
+    """(B, S, H, N) layout wrapper. u: (H, N)."""
+    b, s, h, n = r.shape
+    flat = lambda t: t.transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    rf, kf, vf, wf = flat(r), flat(k), flat(v), flat(w)
+    uf = jnp.tile(u, (b, 1))
+    run, interp = _mode(use_pallas)
+    if run:
+        rf_p, s0 = _pad_to(rf, chunk, 1)
+        kf_p, _ = _pad_to(kf, chunk, 1)
+        vf_p, _ = _pad_to(vf, chunk, 1)
+        # pad decays with 1.0 (= no-op steps) to keep the recurrence exact
+        wf_p = jnp.pad(wf, ((0, 0), (0, rf_p.shape[1] - s0), (0, 0)),
+                       constant_values=1.0)
+        y = wkv6(rf_p, kf_p, vf_p, wf_p, uf, chunk=chunk, interpret=interp)[:, :s0]
+    else:
+        y = ref.wkv6_ref(rf, kf, vf, wf, uf)
+    return y.reshape(b, h, s, n).transpose(0, 2, 1, 3)
+
+
+def ssd_forward(x, dt, a, b, c, *, chunk: int = 128, use_pallas=False):
+    """(B, S, H, P) layout wrapper. dt: (B,S,H); a: (H,); b/c: (B,S,G,N)."""
+    bb, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    xf = x.transpose(0, 2, 1, 3).reshape(bb * h, s, p)
+    dtf = dt.transpose(0, 2, 1).reshape(bb * h, s)
+    bf = jnp.repeat(b, rep, axis=2).transpose(0, 2, 1, 3).reshape(bb * h, s, n)
+    cf = jnp.repeat(c, rep, axis=2).transpose(0, 2, 1, 3).reshape(bb * h, s, n)
+    af = jnp.tile(a, (bb,))
+    run, interp = _mode(use_pallas)
+    if run:
+        xp, s0 = _pad_to(xf, chunk, 1)
+        dtp, _ = _pad_to(dtf, chunk, 1)
+        bp, _ = _pad_to(bf, chunk, 1)
+        cp, _ = _pad_to(cf, chunk, 1)
+        y = ssd(xp, dtp, af, bp, cp, chunk=chunk, interpret=interp)[:, :s0]
+    else:
+        y = ref.ssd_ref(xf, dtf, af, bf, cf)
+    return y.reshape(bb, h, s, p).transpose(0, 2, 1, 3)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gar_matmul_ref(x, v_tilde, u_hat):
+    """(z, tail) for z = x@v_tilde, tail = z@u_hat^T."""
+    z = x @ v_tilde
+    return z, z @ u_hat.T
+
+
+def lowrank_matmul_ref(x, v, u, rank=None):
+    z = x @ v
+    if rank is not None:
+        mask = (jnp.arange(z.shape[-1]) < rank).astype(z.dtype)
+        z = z * mask
+    return z @ u.T
+
+
+def wkv6_ref(r, k, v, w, u):
+    """Sequential WKV6 recurrence. r/k/v/w: (BH, S, N); u: (BH, N)."""
+    bh, s, n = r.shape
+
+    def step(state, xs):
+        r_t, k_t, v_t, w_t = xs  # (BH, N)
+        kv = k_t[:, :, None] * v_t[:, None, :]           # (BH, N, N)
+        y = jnp.einsum("bn,bnm->bm", r_t, state + u[:, :, None] * kv)
+        state = state * w_t[:, :, None] + kv
+        return state, y
+
+    init = jnp.zeros((bh, n, n), jnp.float32)
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    _, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)
+
+
+def ssd_ref(x, dt, a, b, c):
+    """Sequential SSD recurrence. x: (BH,S,P); dt: (BH,S); a: (BH,); b/c: (BH,S,N)."""
+    bh, s, p = x.shape
+    n = b.shape[-1]
+
+    def step(state, xs):
+        x_t, dt_t, b_t, c_t = xs                          # (BH,P),(BH,),(BH,N)
+        decay = jnp.exp(dt_t * a)                         # (BH,)
+        state = state * decay[:, None, None] + jnp.einsum(
+            "bn,bp->bnp", b_t, x_t * dt_t[:, None])
+        y = jnp.einsum("bn,bnp->bp", c_t, state)
+        return state, y
+
+    init = jnp.zeros((bh, n, p), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 1, 0))
+    _, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

@@ -1,0 +1,83 @@
+"""RWKV6 WKV chunked-recurrence Pallas kernel.
+
+One (batch, head) per grid row; chunks advance along the second (sequential)
+grid axis with the (N, N) recurrent state living in a VMEM scratch buffer that
+persists across chunk steps — the standard TPU sequential-grid carry pattern.
+Math identical to models.rwkv.wkv_chunked (the ref oracle): lower-triangular
+intra-chunk decay matrix from cumulative log-decays, bonus ``u`` on the
+diagonal, state decay/update per chunk.
+
+Block shapes (Q=64, N=64): the (Q, Q, N) pairwise-decay tensor is 1 MB fp32 —
+comfortably VMEM-resident; all matmuls are 64x64x64 MXU tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, state_ref, *, q: int, n: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)          # (Q, N)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)          # (1, N) bonus row
+    state = state_ref[...]                    # (N, N)
+
+    logw = jnp.log(jnp.maximum(w, 1e-12))
+    cum = jnp.cumsum(logw, axis=0)            # (Q, N) inclusive
+    cum_prev = cum - logw
+    rel = cum_prev[:, None, :] - cum[None, :, :]            # (Qi, Qj, N)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tri = (ii > jj)[:, :, None]
+    decay_ij = jnp.where(tri, jnp.exp(rel), 0.0)
+    att = jnp.einsum("in,ijn,jn->ij", r, decay_ij, k)
+    diag = jnp.sum(r * u * k, axis=1)                        # (Q,)
+    y = att @ v + diag[:, None] * v
+    y = y + (r * jnp.exp(cum_prev)) @ state
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    to_end = jnp.exp(cum[-1:] - cum)                         # (Q, N)
+    s_c = (k * to_end).T @ v                                 # (N, N)
+    state_ref[...] = state * jnp.exp(cum[-1])[:, None] + s_c
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array,
+         *, chunk: int = 64, interpret: bool = False) -> jax.Array:
+    """r/k/v/w: (BH, S, N) flattened over batch*heads; u: (BH, N) bonus.
+
+    Returns y (BH, S, N). S % chunk == 0 (ops.py pads).
+    """
+    bh, s, n = r.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    u2 = u[:, None, :]  # (BH, 1, N)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, q=chunk, n=n),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, n), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, n), r.dtype),
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u2)
+    return y

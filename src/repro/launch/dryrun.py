@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract memory/cost/collective analysis — the proof that the distribution
+config is coherent without real hardware. See EXPERIMENTS.md §Dry-run.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+      --shape train_4k --mesh single --mode dense --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # every assigned cell
+
+The XLA_FLAGS line above MUST run before any other import (jax locks device
+count at first init); smoke tests/benches import repro.* directly and see 1
+device.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, shapes_for, ASSIGNED_ARCHS
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.meshctx import mesh_context
+from repro.distributed.sharding import param_shardings
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.models import common as cm
+from repro.optim import adamw
+from repro.launch import hlo_analysis, costmodel
+
+# TPU v5e constants (roofline §g)
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16, "s4": 1, "u4": 1}
+
+_DEF_RE = re.compile(r"^\s*(%?[\w\.\-]+)\s*=\s*([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op in (per-device) HLO."""
+    defs: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name, dt, dims = m.groups()
+            if dt in _DTYPE_BYTES:
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                defs[name.lstrip("%")] = n * _DTYPE_BYTES[dt]
+    totals = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for kind in _COLLECTIVES:
+            if re.search(rf"=\s*(\(|[a-z0-9]+\[)[^=]*\b{kind}(-start|-done)?\(", line) and f" {kind}" in line:
+                counts[kind] += 1
+                for op in re.findall(r"%?([\w\.\-]+)(?:,|\))", line.split(f"{kind}", 1)[1]):
+                    if op in defs:
+                        totals[kind] += defs[op]
+                break
+    totals["_counts"] = counts
+    return totals
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool, mode: str,
+               mesh_override=None):
+    cfg = get_config(arch)
+    shape = next(s for s in shapes_for(arch) if s.name == shape_name)
+    if mesh_override:
+        # perf exploration: re-layout the SAME 256/512 chips (e.g. 64x4 =
+        # TP4 x DP64); physical pod unchanged, logical mapping differs.
+        shp = tuple(mesh_override)
+        axes = ("pod", "data", "model")[-len(shp):]
+        mesh = jax.make_mesh(shp, axes)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    return cfg, shape, mesh
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, mode: str,
+               *, fsdp: bool = False):
+    """Returns (lowered, donate-able arg structure description)."""
+    with mesh_context(mesh):
+        in_specs = SP.input_specs(cfg, shape)
+        in_shard = SP.input_shardings(mesh, cfg, shape)
+        pmode = "dense" if mode in ("dense", "serve") else mode
+        if shape.kind == "decode" and mode == "gar":
+            pmode = "gar"
+        if mode == "flexrank_sliced":
+            pmode = "flexrank_sliced"
+        pspecs, paxes = SP.model_param_specs(cfg, mode=pmode)
+        pshard = param_shardings(mesh, paxes, pspecs, fsdp=fsdp)
+        pshapes = cm.shape_tree(pspecs, dtype=SP.COMPUTE_DTYPE)
+        # norms & small vectors stay fp32 via spec dtype? keep uniform bf16 params
+        if shape.kind == "train":
+            ospecs = SP.optimizer_specs(pspecs)
+            oshapes = cm.shape_tree(ospecs)
+            oshard = param_shardings(mesh, cm.axes_tree(ospecs), ospecs, fsdp=fsdp)
+            opt_cfg = adamw.AdamWConfig()
+            step = SP.make_train_step(cfg, opt_cfg, mode=mode if mode in ("flexrank", "flexrank_kd") else "dense")
+            rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            if mode == "flexrank_kd":
+                # paper-faithful consolidation: frozen dense teacher rides along
+                tspecs, taxes = SP.model_param_specs(cfg, mode="dense")
+                tshard = param_shardings(mesh, taxes, tspecs)
+                tshapes = cm.shape_tree(tspecs, dtype=SP.COMPUTE_DTYPE)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(pshard, oshard, in_shard,
+                                  NamedSharding(mesh, P()), tshard),
+                    donate_argnums=(0, 1),
+                )
+                lowered = jitted.lower(pshapes, oshapes, in_specs, rng, tshapes)
+            else:
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(pshard, oshard, in_shard, NamedSharding(mesh, P())),
+                    donate_argnums=(0, 1),
+                )
+                lowered = jitted.lower(pshapes, oshapes, in_specs, rng)
+        elif shape.kind == "prefill":
+            step = SP.make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(pshard, in_shard))
+            lowered = jitted.lower(pshapes, in_specs)
+        else:  # decode
+            cshapes = SP.cache_specs(cfg, shape)
+            cshard = SP.cache_shardings(mesh, cfg, shape, cshapes)
+            step = SP.make_decode_step(cfg)
+            jitted = jax.jit(step, in_shardings=(pshard, cshard, in_shard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(pshapes, cshapes, in_specs)
+        return lowered
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic MODEL_FLOPS: 6ND train / 2ND prefill / 2N_active*B decode."""
+    n_total = cm.param_count(SP.model_param_specs(cfg, mode="dense")[0])
+    n_active = n_total
+    if cfg.moe is not None:
+        m = cfg.moe
+        per_expert = 3 * cfg.d_model * m.d_ff_expert
+        moe_layers = sum(s.count for s in cfg.segments if s.kind == "attn")
+        n_active = n_total - moe_layers * (m.num_experts - m.top_k) * per_expert
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # one decode step
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
+             out_dir: Optional[str], mesh_override=None, tag: str = "",
+             fsdp: bool = False) -> Dict:
+    cfg, shape, mesh = build_cell(arch, shape_name, multi_pod, mode, mesh_override)
+    chips = int(np.prod(list(mesh.shape.values())))
+    rec: Dict = {"arch": arch, "shape": shape_name, "mode": mode,
+                 "mesh": "x".join(str(v) for v in mesh.shape.values()),
+                 "chips": chips}
+    t0 = time.time()
+    try:
+        lowered = lower_cell(cfg, shape, mesh, mode, fsdp=fsdp)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        rec["bytes_per_device"] = {
+            "argument": getattr(mem, "argument_size_in_bytes", None),
+            "output": getattr(mem, "output_size_in_bytes", None),
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "peak": getattr(mem, "peak_memory_in_bytes", None),
+        }
+        # raw XLA numbers (while bodies counted ONCE — kept for transparency)
+        rec["xla_raw"] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        }
+        # while-aware analysis: trip-count-corrected dot flops + collectives
+        hlo = compiled.as_text()
+        ana = hlo_analysis.analyze(hlo)
+        flops = ana["flops_dot"]
+        coll_bytes = ana["collective_bytes_total"]
+        rec["hlo_flops_per_device"] = flops
+        rec["collective_bytes_per_device"] = coll_bytes
+        rec["collectives"] = ana["collective_bytes"]
+        rec["collective_counts"] = ana["collective_counts_static"]
+        rec["collective_counts_dynamic"] = ana["collective_counts_dynamic"]
+        # analytic HBM traffic model (see launch/costmodel.py)
+        traffic = costmodel.memory_traffic(cfg, shape,
+                                           mesh_shape=dict(mesh.shape))
+        bytes_acc = traffic["total"]
+        rec["hlo_bytes_per_device"] = bytes_acc
+        rec["memory_traffic"] = traffic
+        # roofline terms (seconds; per-device quantities over per-chip rates)
+        rec["t_compute"] = flops / PEAK_FLOPS
+        rec["t_memory"] = bytes_acc / HBM_BW
+        rec["t_collective"] = coll_bytes / ICI_BW
+        terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+                 "collective": rec["t_collective"]}
+        rec["bottleneck"] = max(terms, key=terms.get)
+        mf = model_flops(cfg, shape)
+        rec["model_flops_total"] = mf
+        rec["useful_flops_ratio"] = mf / max(flops * chips, 1.0)
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{rec['mesh']}__{mode}" + (f"__{tag}" if tag else "")
+        with open(os.path.join(out_dir, fname + ".json"), "w") as f:
+            json.dump(rec, f, indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--mode", default="dense",
+                    choices=["dense", "flexrank", "flexrank_kd", "gar"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--all", action="store_true",
+                    help="run every assigned (arch x shape) on this mesh")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for s in shapes_for(arch):
+                cells.append((arch, s.name))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape_name in cells:
+        rec = run_cell(arch, shape_name, multi_pod=args.mesh == "multi",
+                       mode=args.mode, out_dir=args.out)
+        keys = ("status", "mesh", "lower_s", "compile_s", "bottleneck",
+                "t_compute", "t_memory", "t_collective")
+        print(f"[{arch} {shape_name} {args.mode}] "
+              + " ".join(f"{k}={rec.get(k)}" for k in keys), flush=True)
+        if rec["status"] != "ok":
+            print(rec.get("error"), flush=True)
+
+
+if __name__ == "__main__":
+    main()

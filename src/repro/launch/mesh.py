@@ -1,0 +1,41 @@
+"""Production mesh construction (multi-pod dry-run requirement).
+
+Defined as FUNCTIONS — importing this module never touches jax device state,
+so unit tests see one CPU device while dryrun.py (which sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import)
+sees the full placeholder fleet.
+
+Mesh convention:
+  single-pod: (16, 16)    axes ('data', 'model')   — one v5e-256 pod
+  multi-pod:  (2, 16, 16) axes ('pod', 'data', 'model') — 512 chips
+
+'model' carries TP/EP/SP; 'data' and 'pod' carry data parallelism (gradient
+all-reduce crosses pods on the slow inter-pod links — which is where the
+PowerSGD option in optim/compression.py earns its keep; see §Perf).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              devices: Optional[list] = None) -> Mesh:
+    """Arbitrary mesh (tests, elastic restarts, small local runs)."""
+    devices = devices if devices is not None else jax.devices()
+    n = int(np.prod(shape))
+    assert len(devices) >= n, (len(devices), shape)
+    return Mesh(np.asarray(devices[:n]).reshape(shape), tuple(axes))
+
+
+def single_device_mesh() -> Mesh:
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))

@@ -1,0 +1,308 @@
+"""Input/param/cache ShapeDtypeStruct + sharding derivation per (arch x shape),
+and the jit-able step functions (train / prefill / decode) the launchers and
+the dry-run share.
+
+Nothing here allocates device memory for full-size models: params, optimizer
+state, and caches are ShapeDtypeStructs until a real trainer materializes
+them (launch/train.py does; launch/dryrun.py never does).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import flexrank as FR
+from repro.core.profiles import uniform_table
+from repro.distributed.meshctx import data_axes, logical_to_spec
+from repro.distributed.sharding import batch_spec, param_shardings
+from repro.models import common as cm
+from repro.models import transformer as tfm
+from repro.optim import adamw
+
+PyTree = Any
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# inputs
+# ---------------------------------------------------------------------------
+
+def frontend_len(cfg: ModelConfig) -> int:
+    if cfg.family == "vlm":
+        return cfg.cross_attn_kv_len or 1601
+    if cfg.family == "audio":
+        return 1024  # precomputed speech frames (stub frontend)
+    return 0
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s + 1), jnp.int32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    else:  # decode: one new token; the KV/state cache carries seq_len
+        out = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    fl = frontend_len(cfg)
+    if fl and shape.kind != "decode":
+        # decode doesn't take the frontend at all: cross-attention K/V are
+        # precomputed per request into the decode state (§Perf cell D).
+        out["frontend"] = jax.ShapeDtypeStruct((b, fl, cfg.frontend_dim), COMPUTE_DTYPE)
+    return out
+
+
+def input_shardings(mesh: Mesh, cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, NamedSharding]:
+    bspec = batch_spec(mesh, extra_dims=1)
+    out = {"tokens": NamedSharding(mesh, bspec)}
+    if shape.global_batch == 1:
+        out["tokens"] = NamedSharding(mesh, P(None, None))
+    if frontend_len(cfg) and shape.kind != "decode":
+        out["frontend"] = NamedSharding(
+            mesh, P(bspec[0] if shape.global_batch > 1 else None, None, None))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# params / optimizer
+# ---------------------------------------------------------------------------
+
+def model_param_specs(cfg: ModelConfig, *, mode: str = "dense",
+                      budget_index: Optional[int] = None) -> Tuple[PyTree, PyTree]:
+    """(spec tree, logical axes tree) for dense / flexrank / gar param modes."""
+    if mode == "dense":
+        spec = tfm.model_spec(cfg)
+    elif mode in ("flexrank", "flexrank_kd"):
+        spec = FR.factorized_spec(cfg)
+    elif mode == "flexrank_sliced":
+        # beyond-paper: per-budget specialized training step — factors are
+        # statically truncated to the budget's ranks, so compiled FLOPs scale
+        # with r instead of full rank (vs the paper's 0/1 masks). §Perf.
+        spec = _sliced_spec(cfg, budget_index if budget_index is not None else None)
+    elif mode == "gar":
+        spec = _gar_spec(cfg, budget_index if budget_index is not None else -2)
+    else:
+        raise ValueError(mode)
+    return spec, cm.axes_tree(spec)
+
+
+def _sliced_spec(cfg: ModelConfig, budget_index: Optional[int]) -> PyTree:
+    infos = FR.group_infos(cfg)
+    budgets = cfg.flexrank.budgets
+    tbl = uniform_table([i.path for i in infos], [i.full_rank for i in infos],
+                        budgets)
+    k = budget_index if budget_index is not None else tbl.table.shape[0] // 2
+    # round ranks up to 256-multiples: MXU-aligned matmul dims AND divisible
+    # by the data axes so FSDP can shard the rank dim (§Perf cell C, iter 4)
+    def _round(r, full):
+        return min(full, int(-(-r // 256) * 256)) if full >= 256 else r
+    row = {i.path: _round(int(tbl.table[k][i.col]), i.full_rank) for i in infos}
+    base = tfm.model_spec(cfg)
+    excl = cfg.flexrank.exclude
+    return cm.factorize_spec(
+        base,
+        predicate=lambda path, sp: not any(t in path for t in excl),
+        max_rank_fn=lambda path, sp: row.get(path))
+
+
+def _gar_spec(cfg: ModelConfig, budget_index: int) -> PyTree:
+    """Factorized spec -> GAR deploy spec at one (uniform-grid) budget."""
+    fact = FR.factorized_spec(cfg)
+    infos = FR.group_infos(cfg)
+    budgets = cfg.flexrank.budgets
+    frac = budgets[budget_index] if -len(budgets) <= budget_index < len(budgets) else 0.5
+
+    def conv(tree):
+        if isinstance(tree, dict) and {"u", "v"} <= set(tree.keys()) and cm.is_spec(tree.get("u")):
+            u, v = tree["u"], tree["v"]
+            lead = u.shape[:-2]
+            lead_axes = u.axes[:-2]
+            m, n, rf = u.shape[-2], v.shape[-2], u.shape[-1]
+            # GAR rank: budget fraction of parameters -> r*(m+n-r) = frac*m*n
+            r = int(np.floor(((m + n) - np.sqrt((m + n) ** 2 - 4 * frac * m * n)) / 2))
+            r = max(min(r, rf - 1, m - 1, n - 1), 1)
+            return {
+                "u_hat": cm.ParamSpec(lead + (m - r, r), lead_axes + (u.axes[-2], cm.RANK)),
+                "v_tilde": cm.ParamSpec(lead + (n, r), lead_axes + (v.axes[-2], cm.RANK)),
+                "perm_inv": cm.ParamSpec(lead + (m,), lead_axes + (None,), "zeros", jnp.int32),
+            }
+        if isinstance(tree, dict):
+            return {k: conv(v_) for k, v_ in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return [conv(v_) for v_ in tree]
+        return tree
+
+    return conv(fact)
+
+
+def optimizer_specs(param_specs: PyTree) -> PyTree:
+    """AdamWState spec tree matching params (fp32 moments)."""
+    as_f32 = cm._tree_map_specs(
+        lambda s: cm.ParamSpec(s.shape, s.axes, "zeros", jnp.float32), param_specs)
+    return adamw.AdamWState(
+        step=cm.ParamSpec((), (), "zeros", jnp.int32),
+        mu=as_f32, nu=jax.tree.map(lambda x: x, as_f32,
+                                   is_leaf=cm.is_spec))
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, *, dtype=COMPUTE_DTYPE) -> PyTree:
+    """ShapeDtypeStructs for the decode state (no allocation). Cross-attn K/V
+    buffers are included for vlm/audio (precomputed per request — §Perf D)."""
+    ckv = frontend_len(cfg) if cfg.family in ("vlm", "audio") else 0
+    fn = lambda: tfm.init_decode_state(cfg, shape.global_batch, shape.seq_len,
+                                       dtype=dtype, cross_kv_len=ckv)
+    return jax.eval_shape(fn)
+
+
+_CACHE_RULES = {
+    # key: (dims-from-right assignment) — see launch/specs.py docstring
+    "k": {-2: "model", -4: "batch", "seq": -3},
+    "v": {-2: "model", -4: "batch", "seq": -3},
+    "cross_k": {-2: "model", -4: "batch"},
+    "cross_v": {-2: "model", -4: "batch"},
+    "c_kv": {-3: "batch", "seq": -2},
+    "k_rope": {-3: "batch", "seq": -2},
+    "conv": {-1: "model", -3: "batch"},
+    "ssd": {-3: "model", -4: "batch"},
+    "wkv": {-3: "model", -4: "batch"},
+    "shift_t": {-2: "batch"},
+    "shift_c": {-2: "batch"},
+}
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, shape: ShapeConfig,
+                    caches: PyTree) -> PyTree:
+    """Shard caches: kv-heads/state-heads on 'model', batch on data axes; for
+    global_batch == 1 (long-context decode) shard the *sequence* dim on 'data'
+    instead — the sequence-parallel KV layout."""
+    batch1 = shape.global_batch == 1
+    d_ax = data_axes(mesh)
+    batch_entry = d_ax if len(d_ax) > 1 else (d_ax[0] if d_ax else None)
+
+    def rule(path, leaf):
+        key = None
+        for p in reversed(path):
+            name = getattr(p, "key", None)
+            if name is not None:
+                key = name
+                break
+        nd = leaf.ndim
+        spec = [None] * nd
+        r = _CACHE_RULES.get(key)
+        if r is None:
+            return NamedSharding(mesh, P())
+        for off, ax in r.items():
+            if off == "seq":
+                continue
+            i = nd + off
+            if i < 0:
+                continue
+            if ax == "model" and "model" in mesh.axis_names:
+                if leaf.shape[i] % mesh.shape["model"] == 0:
+                    spec[i] = "model"
+                elif key in ("k", "v") and nd + (-3) >= 0 and \
+                        leaf.shape[nd - 3] % mesh.shape["model"] == 0:
+                    # kv-heads indivisible by the model axis (e.g. 8 heads on
+                    # TP16): shard the cache *sequence* dim instead — decode
+                    # attention then runs flash-decode style over T shards
+                    # (§Perf cell D, iter 2)
+                    spec[nd - 3] = "model"
+            elif ax == "batch" and not batch1 and batch_entry is not None:
+                size = int(np.prod([mesh.shape[nm] for nm in (batch_entry if isinstance(batch_entry, tuple) else (batch_entry,))]))
+                if leaf.shape[i] % size == 0:
+                    spec[i] = batch_entry
+        if batch1 and "seq" in r and "data" in mesh.axis_names:
+            i = nd + r["seq"]
+            if 0 <= i < nd and leaf.shape[i] % mesh.shape["data"] == 0:
+                spec[i] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    flat, treedef = jax.tree.flatten_with_path(caches)
+    return jax.tree.unflatten(treedef, [rule(p, l) for p, l in flat])
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, *,
+                    mode: str = "dense", num_budgets: int = 7):
+    """Returns train_step(params, opt_state, batch, rng) -> (params, opt, metrics).
+
+    mode 'flexrank': factorized params + stochastic nested masks, CE loss.
+    mode 'flexrank_kd': + frozen dense teacher (paper-faithful distillation)
+    — signature gains a ``teacher`` arg.
+    """
+    infos = (FR.group_infos(cfg)
+             if mode in ("flexrank", "flexrank_kd") else None)
+    if infos:
+        names = [i.path for i in infos]
+        maxr = [i.full_rank for i in infos]
+        budgets = cfg.flexrank.budgets[:num_budgets]
+        tbl = uniform_table(names, maxr, budgets)
+        table_dev_np = tbl.table
+    kd = mode == "flexrank_kd"
+
+    def loss_fn(params, batch, rng, teacher_params=None):
+        tokens = batch["tokens"][:, :-1]
+        labels = batch["tokens"][:, 1:]
+        frontend = batch.get("frontend")
+        ranks = None
+        if infos:
+            table_dev = jnp.asarray(table_dev_np)
+            k = jax.random.randint(rng, (), 0, table_dev.shape[0])
+            ranks = FR.ranks_tree(cfg, infos, table_dev, k)
+        logits, aux = tfm.forward(params, cfg, tokens, ranks=ranks, frontend=frontend)
+        from repro.core import distill
+        if kd and teacher_params is not None:
+            t_logits, _ = tfm.forward(teacher_params, cfg, tokens, frontend=frontend)
+            loss = distill.consolidation_loss(logits, t_logits, labels,
+                                              kd_weight=cfg.flexrank.kd_weight,
+                                              temperature=cfg.flexrank.kd_temperature)
+        else:
+            loss = distill.cross_entropy(logits, labels)
+        return loss + aux
+
+    if kd:
+        def train_step(params, opt_state, batch, rng, teacher_params):
+            with tfm.remat_blocks():
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch, rng, teacher_params)
+            params, opt_state, metrics = adamw.apply_updates(params, grads, opt_state, opt_cfg)
+            return params, opt_state, {"loss": loss, **metrics}
+    else:
+        def train_step(params, opt_state, batch, rng):
+            with tfm.remat_blocks():
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch, rng)
+            params, opt_state, metrics = adamw.apply_updates(params, grads, opt_state, opt_cfg)
+            return params, opt_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        logits, _ = tfm.forward(params, cfg, tokens, frontend=batch.get("frontend"))
+        return logits[:, -1]  # next-token logits
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, state, batch):
+        kv_source = batch.get("frontend")
+        logits, state = tfm.decode_step(params, cfg, state, batch["tokens"],
+                                        kv_source=kv_source)
+        return logits[:, 0], state
+    return decode_step

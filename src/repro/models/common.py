@@ -1,0 +1,365 @@
+"""Parameter-spec system + shared primitives for the model zoo.
+
+No flax in this container, so we hand-roll a minimal functional module system
+designed around three consumers:
+
+  * smoke tests    — materialize small real arrays (``instantiate``)
+  * dry-run        — ShapeDtypeStructs only, never allocate (``shape_tree``)
+  * pjit           — logical axes per param -> PartitionSpec  (``axes_tree``)
+
+A module is (spec_fn(cfg) -> ParamSpec pytree, apply_fn(params, ...) -> out).
+Layer stacks carry a leading ``layers`` axis and are driven by ``lax.scan`` so
+HLO size and compile time are O(1) in depth — essential on this 1-core host
+where we compile 512-way-sharded 100B-param graphs.
+
+FlexRank integration: ``factorize_spec`` rewrites eligible dense leaves
+``{'w': (.., d_in, d_out)}`` into ``{'u': (.., d_out, r), 'v': (.., d_in, r)}``
+and ``linear()`` transparently consumes either form, with optional nested rank
+masking (paper §3.3) or GAR deploy form (§3.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+# Logical axis names used throughout; distributed/sharding.py maps them to
+# physical mesh axes.
+EMBED, MLP, HEADS, KV_HEADS, QKV, VOCAB, LAYERS, EXPERTS, RANK, CONV, STATE = (
+    "embed", "mlp", "heads", "kv_heads", "qkv", "vocab", "layers", "experts",
+    "rank", "conv", "state",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative parameter: shape + logical axes + initializer id."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | scaled(<fan_in>)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map_specs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def instantiate(specs: PyTree, key: Array, *, dtype=None) -> PyTree:
+    """Materialize real arrays (smoke tests / real training)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        dt = dtype or s.dtype
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dt))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dt))
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+            out.append(scale * jax.random.normal(k, s.shape, dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def shape_tree(specs: PyTree, *, dtype=None) -> PyTree:
+    """ShapeDtypeStructs for .lower() — zero allocation (dry-run path).
+
+    ``dtype`` overrides *floating* leaves only (ints like GAR's perm_inv keep
+    their declared dtype)."""
+    def conv(s):
+        dt = s.dtype
+        if dtype is not None and jnp.issubdtype(s.dtype, jnp.floating):
+            dt = dtype
+        return jax.ShapeDtypeStruct(s.shape, dt)
+    return _tree_map_specs(conv, specs)
+
+
+def axes_tree(specs: PyTree) -> PyTree:
+    """Logical-axes pytree mirroring the params structure."""
+    return _tree_map_specs(lambda s: s.axes, specs)
+
+
+def param_count(specs: PyTree) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def stack_spec(spec: PyTree, num_layers: int) -> PyTree:
+    """Add a leading scanned ``layers`` axis to every leaf."""
+    return _tree_map_specs(
+        lambda s: ParamSpec((num_layers,) + s.shape, (LAYERS,) + s.axes, s.init, s.dtype),
+        spec)
+
+
+# ---------------------------------------------------------------------------
+# FlexRank factorization of spec trees
+# ---------------------------------------------------------------------------
+
+def dense_linear_spec(d_in: int, d_out: int, in_axis: str, out_axis: str) -> Dict[str, ParamSpec]:
+    return {"w": ParamSpec((d_in, d_out), (in_axis, out_axis))}
+
+
+def factorize_leaf(spec: ParamSpec, max_rank: Optional[int] = None) -> Dict[str, ParamSpec]:
+    """Dense (.., d_in, d_out) -> {'v': (.., d_in, r), 'u': (.., d_out, r)}.
+
+    Convention matches the paper with W = U V^T acting as y = W x, i.e. in the
+    row-vector convention y = x @ (V U^T): z = x @ v; y = z @ u^T.
+    """
+    *lead, d_in, d_out = spec.shape
+    r = min(d_in, d_out) if max_rank is None else min(max_rank, d_in, d_out)
+    lead_axes = spec.axes[:-2]
+    in_axis, out_axis = spec.axes[-2], spec.axes[-1]
+    return {
+        "v": ParamSpec(tuple(lead) + (d_in, r), lead_axes + (in_axis, RANK), spec.init, spec.dtype),
+        "u": ParamSpec(tuple(lead) + (d_out, r), lead_axes + (out_axis, RANK), spec.init, spec.dtype),
+    }
+
+
+def factorize_spec(specs: PyTree, *, predicate: Callable[[str, ParamSpec], bool],
+                   max_rank_fn: Callable[[str, ParamSpec], Optional[int]] = lambda p, s: None,
+                   prefix: str = "") -> PyTree:
+    """Rewrite eligible ``{'w': spec}`` sub-dicts into factorized form.
+
+    ``predicate(path, spec)`` decides eligibility; paths are '/'-joined key
+    chains (list indices included) ending at the dict that holds 'w'.
+    """
+    if isinstance(specs, dict):
+        if set(specs.keys()) == {"w"} and is_spec(specs["w"]):
+            if predicate(prefix, specs["w"]):
+                return factorize_leaf(specs["w"], max_rank_fn(prefix, specs["w"]))
+            return specs
+        return {k: factorize_spec(v, predicate=predicate, max_rank_fn=max_rank_fn,
+                                  prefix=f"{prefix}/{k}" if prefix else k)
+                for k, v in specs.items()}
+    if isinstance(specs, (list, tuple)):
+        out = [factorize_spec(v, predicate=predicate, max_rank_fn=max_rank_fn,
+                              prefix=f"{prefix}/{i}" if prefix else str(i))
+               for i, v in enumerate(specs)]
+        return type(specs)(out) if isinstance(specs, tuple) else out
+    return specs
+
+
+def factorized_groups(specs: PyTree, prefix: str = "") -> Dict[str, Dict]:
+    """Map group path -> {'u': shape, 'v': shape} for factorized leaf pairs."""
+    out: Dict[str, Dict] = {}
+    if isinstance(specs, dict):
+        if {"u", "v"} <= set(specs.keys()) and is_spec(specs.get("u")):
+            out[prefix] = {"u": specs["u"].shape, "v": specs["v"].shape}
+            return out
+        for k, v in specs.items():
+            out.update(factorized_groups(v, f"{prefix}/{k}" if prefix else k))
+    elif isinstance(specs, (list, tuple)):
+        for i, v in enumerate(specs):
+            out.update(factorized_groups(v, f"{prefix}/{i}" if prefix else str(i)))
+    return out
+
+
+def tree_get(tree: PyTree, path: str):
+    cur = tree
+    for tok in path.split("/"):
+        cur = cur[int(tok)] if isinstance(cur, (list, tuple)) else cur[tok]
+    return cur
+
+
+def tree_set(tree: PyTree, path: str, value) -> None:
+    toks = path.split("/")
+    cur = tree
+    for tok in toks[:-1]:
+        cur = cur[int(tok)] if isinstance(cur, (list, tuple)) else cur[tok]
+    last = toks[-1]
+    if isinstance(cur, list):
+        cur[int(last)] = value
+    else:
+        cur[last] = value
+
+
+def rget(ranks, *path):
+    """Nested lookup into a ranks pytree; None when absent (dense leaf)."""
+    cur = ranks
+    for k in path:
+        if not isinstance(cur, dict) or k not in cur:
+            return None
+        cur = cur[k]
+    return None if isinstance(cur, dict) else cur
+
+
+# ---------------------------------------------------------------------------
+# Activation taps (DataSVD moment collection — core/flexrank.py)
+# ---------------------------------------------------------------------------
+# When a tap store is active (only during the *unrolled*, eager calibration
+# pass), linear() accumulates the unnormalized second moment of its input
+# under a key mirroring the param path ("segments/0/@3/attn/q", where "@l"
+# marks scan indices). Zero overhead otherwise: one `is None` check.
+
+import contextlib
+import threading
+
+_TAPS = threading.local()
+
+
+def _tap_state():
+    if not hasattr(_TAPS, "store"):
+        _TAPS.store = None
+        _TAPS.prefix = []
+    return _TAPS
+
+
+@contextlib.contextmanager
+def tap_recording(store: dict):
+    st = _tap_state()
+    prev = st.store
+    st.store = store
+    try:
+        yield store
+    finally:
+        st.store = prev
+
+
+@contextlib.contextmanager
+def tap_scope(name: str, *, absolute: bool = False):
+    st = _tap_state()
+    saved = st.prefix
+    st.prefix = [name] if absolute else saved + [name]
+    try:
+        yield
+    finally:
+        st.prefix = saved
+
+
+def record_tap(name: str, x) -> None:
+    st = _tap_state()
+    if st.store is None or name is None:
+        return
+    import numpy as _np
+    key = "/".join(st.prefix + [name])
+    flat = _np.asarray(x, dtype=_np.float32).reshape(-1, x.shape[-1])
+    ent = st.store.get(key)
+    if ent is None:
+        st.store[key] = [flat.T @ flat, float(flat.shape[0])]
+    else:
+        ent[0] += flat.T @ flat
+        ent[1] += float(flat.shape[0])
+
+
+def taps_active() -> bool:
+    return _tap_state().store is not None
+
+
+# ---------------------------------------------------------------------------
+# Core math primitives
+# ---------------------------------------------------------------------------
+
+def linear(p: Dict[str, Array], x: Array, *, rank: Optional[Array] = None,
+           precision=None, tap: Optional[str] = None) -> Array:
+    """y = x @ W with W dense, factorized (optionally rank-masked), or GAR.
+
+    dense:      p = {'w': (d_in, d_out)}
+    factorized: p = {'v': (d_in, r), 'u': (d_out, r)}; if ``rank`` is given
+                (traced scalar), columns >= rank are masked out — the paper's
+                nested-mask training path. FLOPs stay O(full rank) by design
+                (paper's documented ~2x training overhead).
+    gar:        p = {'v_tilde': (d_in, r), 'u_hat': (d_out - r, r),
+                 'perm_inv': (d_out,)}; deploy path, O((m+n-r) r).
+    """
+    if taps_active():
+        record_tap(tap, x)
+    if "w" in p:
+        return jnp.matmul(x, p["w"].astype(x.dtype), precision=precision)
+    if "u_hat" in p:
+        z = jnp.matmul(x, p["v_tilde"].astype(x.dtype), precision=precision)
+        tail = jnp.matmul(z, p["u_hat"].T.astype(x.dtype), precision=precision)
+        y = jnp.concatenate([z, tail], axis=-1)
+        return jnp.take(y, p["perm_inv"], axis=-1)
+    z = jnp.matmul(x, p["v"].astype(x.dtype), precision=precision)
+    if rank is not None:
+        mask = (jnp.arange(z.shape[-1]) < rank).astype(z.dtype)
+        z = z * mask
+    return jnp.matmul(z, p["u"].T.astype(x.dtype), precision=precision)
+
+
+def rms_norm(x: Array, scale: Array, *, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, *, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def rope(x: Array, positions: Array, *, base: float = 10000.0, dims: Optional[int] = None) -> Array:
+    """Rotary embedding. x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1] if dims is None else dims
+    half = d // 2
+    freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angle = positions[..., None].astype(jnp.float32) * freq  # (B, S, half)
+    sin = jnp.sin(angle)[:, :, None, :]
+    cos = jnp.cos(angle)[:, :, None, :]
+    x_rot, x_pass = x[..., :d], x[..., d:]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if x_pass.shape[-1]:
+        out = jnp.concatenate([out, x_pass], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(gate: Array, up: Array) -> Array:
+    return jax.nn.silu(gate) * up
+
+
+def causal_window_mask(q_pos: Array, k_pos: Array, window: Array | int) -> Array:
+    """(..., S_q, S_k) boolean mask: causal AND within ``window`` lookback.
+
+    ``window`` may be a traced scalar — this is how local and global layers of
+    gemma3-style 5:1 stacks share one scanned HLO body (window = seq_len for
+    global layers).
+    """
+    delta = q_pos[..., :, None] - k_pos[..., None, :]
+    return (delta >= 0) & (delta < window)
+
+
+def attend(q: Array, k: Array, v: Array, mask: Optional[Array], *,
+           scale: Optional[float] = None) -> Array:
+    """Grouped-query scaled dot-product attention.
+
+    q: (B, S, Hq, D); k, v: (B, T, Hkv, D); Hq = G * Hkv. mask: (B, S, T) or
+    (S, T) boolean (True = attend) or None.
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, s, hkv, g, d)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg * scale, k).astype(jnp.float32)
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None]
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v)
+    return out.reshape(b, s, hq, d)

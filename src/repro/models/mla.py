@@ -1,0 +1,166 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3 style).
+
+Queries go through a LoRA bottleneck (q_down -> q_up); keys/values are
+compressed into a small latent ``c_kv`` (kv_lora_rank) that is up-projected
+per head, with a decoupled RoPE sub-head (rope_head_dim) shared across heads
+for the keys. The decode cache stores only ``(c_kv, k_rope)`` — the latent —
+which is MLA's KV-memory advantage; up-projection happens per decode step.
+
+Note the pleasant composition with FlexRank: MLA is itself a *structural*
+low-rank factorization of the KV path chosen at architecture time; FlexRank's
+DataSVD factorizes the remaining dense projections (q_down/q_up/kv_up/o) and
+its DP assigns them budget-dependent ranks (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models.common import ParamSpec, linear
+
+Array = jax.Array
+
+
+def mla_spec(cfg: ModelConfig) -> Dict:
+    a = cfg.mla
+    d = cfg.d_model
+    h = cfg.num_heads
+    qd = a.nope_head_dim + a.rope_head_dim
+    return {
+        "q_down": {"w": ParamSpec((d, a.q_lora_rank), (cm.EMBED, None))},
+        "q_norm": ParamSpec((a.q_lora_rank,), (None,), "zeros"),
+        "q_up": {"w": ParamSpec((a.q_lora_rank, h * qd), (None, cm.HEADS))},
+        "kv_down": {"w": ParamSpec((d, a.kv_lora_rank + a.rope_head_dim), (cm.EMBED, None))},
+        "kv_norm": ParamSpec((a.kv_lora_rank,), (None,), "zeros"),
+        "kv_up": {"w": ParamSpec(
+            (a.kv_lora_rank, h * (a.nope_head_dim + a.v_head_dim)), (None, cm.HEADS))},
+        "o": {"w": ParamSpec((h * a.v_head_dim, d), (cm.HEADS, cm.EMBED))},
+    }
+
+
+def _effective_weight(p: Dict, rank) -> Array:
+    """Dense equivalent of a (possibly factorized / GAR) linear's weight —
+    cheap here because MLA's kv_up input dim is the small latent rank."""
+    if "w" in p:
+        return p["w"]
+    if "u_hat" in p:
+        eye = jnp.eye(p["v_tilde"].shape[1], dtype=p["v_tilde"].dtype)
+        u_tilde = jnp.concatenate([eye, p["u_hat"]], axis=0)
+        w = p["v_tilde"] @ u_tilde.T
+        return jnp.take(w, p["perm_inv"], axis=1)
+    v, u = p["v"], p["u"]
+    if rank is not None:
+        mask = (jnp.arange(v.shape[-1]) < rank).astype(v.dtype)
+        v = v * mask
+    return v @ u.T
+
+
+def mla_apply(
+    p: Dict,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    positions: Array,
+    window: Array | int,
+    ranks: Optional[Dict[str, Array]] = None,
+    cache: Optional[Dict[str, Array]] = None,
+) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    """MLA self-attention. cache: {'c_kv': (B,T,kv_rank), 'k_rope': (B,T,rd), 'idx': ()}."""
+    a = cfg.mla
+    r = ranks or {}
+    b, s, _ = x.shape
+    h = cfg.num_heads
+
+    q = linear(p["q_down"], x, rank=r.get("q_down"), tap="q_down")
+    q = cm.rms_norm(q, p["q_norm"], eps=cfg.norm_eps)
+    q = linear(p["q_up"], q, rank=r.get("q_up"), tap="q_up")
+    q = q.reshape(b, s, h, a.nope_head_dim + a.rope_head_dim)
+    q_nope, q_rope = q[..., :a.nope_head_dim], q[..., a.nope_head_dim:]
+    q_rope = cm.rope(q_rope, positions, base=cfg.rope_base)
+
+    ckv_full = linear(p["kv_down"], x, rank=r.get("kv_down"), tap="kv_down")
+    c_kv, k_rope = ckv_full[..., :a.kv_lora_rank], ckv_full[..., a.kv_lora_rank:]
+    c_kv = cm.rms_norm(c_kv, p["kv_norm"], eps=cfg.norm_eps)
+    k_rope = cm.rope(k_rope[:, :, None, :], positions, base=cfg.rope_base)[:, :, 0]
+
+    new_cache = None
+    if cache is not None:
+        idx = cache["idx"]
+        c_kv_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), idx, axis=1)
+        k_rope_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), idx, axis=1)
+        new_cache = {"c_kv": c_kv_all, "k_rope": k_rope_all, "idx": idx + s}
+        # --- absorbed decode (DeepSeek-V2 trick; EXPERIMENTS.md §Perf) ---
+        # Fold W_kv_up into the query/output sides so attention runs directly
+        # against the latent cache: per step O(h*(nope+v)*kv_rank + T*kv_rank)
+        # instead of up-projecting the entire 32k cache every token.
+        w_up = _effective_weight(p["kv_up"], r.get("kv_up"))      # (kv_rank, h*(n+v))
+        w_up = w_up.reshape(a.kv_lora_rank, h, a.nope_head_dim + a.v_head_dim)
+        w_k = w_up[..., :a.nope_head_dim]                         # (c, h, n)
+        w_v = w_up[..., a.nope_head_dim:]                         # (c, h, v)
+        q_lat = jnp.einsum("bshn,chn->bshc", q_nope, w_k.astype(q_nope.dtype))
+        t = c_kv_all.shape[1]
+        k_positions = jnp.arange(t)
+        scale = 1.0 / math.sqrt(a.nope_head_dim + a.rope_head_dim)
+        logits = (jnp.einsum("bshc,btc->bhst", q_lat, c_kv_all)
+                  + jnp.einsum("bshd,btd->bhst", q_rope, k_rope_all)
+                  ).astype(jnp.float32) * scale
+        delta = positions[:, None] - k_positions[None, :]
+        valid = (delta >= 0) & (delta < window)
+        logits = jnp.where(valid[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out_lat = jnp.einsum("bhst,btc->bshc", probs, c_kv_all)   # (b,s,h,c)
+        out = jnp.einsum("bshc,chv->bshv", out_lat, w_v.astype(x.dtype))
+        out = out.reshape(b, s, h * a.v_head_dim)
+        y = linear(p["o"], out, rank=r.get("o"), tap="o")
+        return y, new_cache
+
+    c_kv_t, k_rope_t = c_kv, k_rope
+    k_positions = positions
+
+    kv = linear(p["kv_up"], c_kv_t, rank=r.get("kv_up"), tap="kv_up")
+    t = c_kv_t.shape[1]
+    kv = kv.reshape(b, t, h, a.nope_head_dim + a.v_head_dim)
+    k_nope, v = kv[..., :a.nope_head_dim], kv[..., a.nope_head_dim:]
+
+    scale = 1.0 / math.sqrt(a.nope_head_dim + a.rope_head_dim)
+
+    # exact query-chunked attention (same discipline as attention.chunked_attend)
+    from repro.models.attention import Q_CHUNK
+    qc = min(Q_CHUNK, s)
+    n_chunks = max(s // qc, 1)
+    qc = s // n_chunks
+    qn = jnp.moveaxis(q_nope.reshape(b, n_chunks, qc, h, -1), 1, 0)
+    qr = jnp.moveaxis(q_rope.reshape(b, n_chunks, qc, h, -1), 1, 0)
+    qp = positions.reshape(n_chunks, qc)
+
+    def one_chunk(_, xs):
+        qn_i, qr_i, pos_i = xs
+        logits = (jnp.einsum("bqhd,bthd->bhqt", qn_i, k_nope)
+                  + jnp.einsum("bqhd,btd->bhqt", qr_i, k_rope_t)).astype(jnp.float32) * scale
+        delta = pos_i[:, None] - k_positions[None, :]
+        valid = (delta >= 0) & (delta < window)
+        logits = jnp.where(valid[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        return None, jnp.einsum("bhqt,bthd->bqhd", probs, v)
+
+    _, outs = jax.lax.scan(one_chunk, None, (qn, qr, qp))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h * a.v_head_dim)
+    y = linear(p["o"], out, rank=r.get("o"), tap="o")
+    return y, new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, *, dtype=jnp.bfloat16,
+                   num_instances: int = 1) -> Dict:
+    a = cfg.mla
+    return {
+        "c_kv": jnp.zeros((num_instances, batch, max_len, a.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((num_instances, batch, max_len, a.rope_head_dim), dtype),
+        "idx": jnp.zeros((num_instances,), jnp.int32),
+    }

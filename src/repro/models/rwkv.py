@@ -1,0 +1,220 @@
+"""RWKV6 "Finch" block: data-dependent-decay linear attention.
+
+Time-mix: token-shift interpolation with data-dependent mixing (ddlerp LoRAs),
+r/k/v/g projections, per-channel decay ``w_t = exp(-exp(w0 + lora_w(x)))``,
+and the WKV linear recurrence with in-place bonus ``u``:
+
+    y_t = r_t^T (S + u .o (k_t v_t^T))        S <- diag(w_t) S + k_t v_t^T
+
+computed chunk-parallel: within a chunk the recurrence is a lower-triangular
+matrix built from cumulative log-decays (same trick as Mamba2's SSD), across
+chunks a lax.scan carries the (H, N, N) state. Channel-mix is the squared-ReLU
+gated FFN of the RWKV family.
+
+FlexRank: the r/k/v/g/o and channel-mix projections are dense leaves ->
+factorizable; the token-shift/decay LoRAs are already rank<=64 by construction
+and stay dense (cfg.flexrank.exclude covers 'decay'/'mix').
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models.common import ParamSpec, linear
+
+Array = jax.Array
+
+_TARGETS = ("w", "k", "v", "r", "g")
+
+
+def rwkv_spec(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    rw = cfg.rwkv
+    spec: Dict = {
+        "ln_t": ParamSpec((d,), (None,), "zeros"),
+        "ln_c": ParamSpec((d,), (None,), "zeros"),
+        "time": {
+            # ddlerp token-shift mixers
+            "mix_base": ParamSpec((d,), (None,), "zeros"),
+            "mix_bias": ParamSpec((len(_TARGETS), d), (None, None), "zeros"),
+            "mix_lora_a": ParamSpec((d, len(_TARGETS) * rw.mix_lora), (cm.EMBED, None)),
+            "mix_lora_b": ParamSpec((len(_TARGETS), rw.mix_lora, d), (None, None, None), "zeros"),
+            # data-dependent decay
+            "decay_base": ParamSpec((d,), (None,), "zeros"),
+            "decay_lora_a": ParamSpec((d, rw.decay_lora), (cm.EMBED, None)),
+            "decay_lora_b": ParamSpec((rw.decay_lora, d), (None, None), "zeros"),
+            "bonus": ParamSpec((d,), (None,), "zeros"),  # u
+            "r": {"w": ParamSpec((d, d), (cm.EMBED, cm.HEADS))},
+            "k": {"w": ParamSpec((d, d), (cm.EMBED, cm.HEADS))},
+            "v": {"w": ParamSpec((d, d), (cm.EMBED, cm.HEADS))},
+            "g": {"w": ParamSpec((d, d), (cm.EMBED, cm.HEADS))},
+            "o": {"w": ParamSpec((d, d), (cm.HEADS, cm.EMBED))},
+            "ln_x": ParamSpec((d,), (None,), "zeros"),
+        },
+        "channel": {
+            "mix_k": ParamSpec((d,), (None,), "zeros"),
+            "mix_r": ParamSpec((d,), (None,), "zeros"),
+            "k": {"w": ParamSpec((d, cfg.d_ff), (cm.EMBED, cm.MLP))},
+            "v": {"w": ParamSpec((cfg.d_ff, d), (cm.MLP, cm.EMBED))},
+            "r": {"w": ParamSpec((d, d), (cm.EMBED, cm.HEADS))},
+        },
+    }
+    return spec
+
+
+def _token_shift(x: Array, prev: Optional[Array]) -> Array:
+    """x_{t-1} with cross-step carry for decode. x: (B, S, D)."""
+    if x.shape[1] == 1 and prev is not None:
+        return prev[:, None, :]
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev)
+    return shifted
+
+
+def wkv_chunked(r: Array, k: Array, v: Array, w: Array, u: Array, *, chunk: int,
+                initial_state: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Chunk-parallel WKV6 recurrence.
+
+    r/k/v: (B, S, H, N); w: (B, S, H, N) decays in (0,1); u: (H, N) bonus.
+    Returns (y (B,S,H,N_v=N), final_state (B,H,N,N)).
+    """
+    bb, s, h, n = r.shape
+    q = min(chunk, s)
+    nc = s // q
+    assert s % q == 0
+
+    def split(t):
+        return jnp.moveaxis(t.reshape(bb, nc, q, h, n), 1, 0)
+
+    rl, kl, vl, wl = split(r), split(k), split(v), split(w)
+    tri_lower = jnp.tril(jnp.ones((q, q), bool), k=-1)  # strictly lower (j < i)
+
+    def one_chunk(state, xs):
+        r_c, k_c, v_c, w_c = xs                      # (B,Q,H,N)
+        logw = jnp.log(jnp.maximum(w_c.astype(jnp.float32), 1e-12))
+        cum = jnp.cumsum(logw, axis=1)               # inclusive (B,Q,H,N)
+        # decay from j to i (contribution of token j to output i, i > j):
+        # prod_{s=j+1}^{i-1} w_s = exp(cum_{i-1} - cum_j)
+        cum_prev = cum - logw                        # cum_{i-1} (exclusive)
+        rel = cum_prev[:, :, None] - cum[:, None, :, :, :]   # (B,Qi,Qj,H,N)
+        decay_ij = jnp.where(tri_lower[None, :, :, None, None], jnp.exp(rel), 0.0)
+        att = jnp.einsum("bihn,bijhn,bjhn->bijh", r_c.astype(jnp.float32),
+                         decay_ij, k_c.astype(jnp.float32))
+        # diagonal bonus term: u .o k_i
+        diag = jnp.einsum("bihn,hn,bihn->bih", r_c.astype(jnp.float32),
+                          u.astype(jnp.float32), k_c.astype(jnp.float32))
+        y_c = jnp.einsum("bijh,bjhm->bihm", att, v_c.astype(jnp.float32))
+        y_c = y_c + diag[..., None] * v_c.astype(jnp.float32)
+        # inter-chunk: y_i += (r_i .o exp(cum_{i-1}))^T S_prev
+        carry_in = jnp.exp(cum_prev)
+        y_c = y_c + jnp.einsum("bihn,bihn,bhnm->bihm",
+                               r_c.astype(jnp.float32), carry_in, state)
+        # state update: S <- diag(exp(cum_end)) S + sum_j exp(cum_end - cum_j) k_j v_j^T
+        to_end = jnp.exp(cum[:, -1:] - cum)
+        s_c = jnp.einsum("bjhn,bjhn,bjhm->bhnm", to_end, k_c.astype(jnp.float32),
+                         v_c.astype(jnp.float32))
+        new_state = state * jnp.exp(cum[:, -1])[..., None] + s_c
+        return new_state, y_c.astype(r.dtype)
+
+    init = (initial_state if initial_state is not None
+            else jnp.zeros((bb, h, n, n), jnp.float32))
+    final, ys = jax.lax.scan(one_chunk, init, (rl, kl, vl, wl))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bb, s, h, n)
+    return y, final
+
+
+def _ddlerp(x: Array, x_prev: Array, p: Dict, rw) -> Dict[str, Array]:
+    """Data-dependent token-shift interpolation for all five targets."""
+    dx = x_prev - x
+    base = x + dx * p["mix_base"][None, None].astype(x.dtype)
+    lora = jnp.tanh(base @ p["mix_lora_a"].astype(x.dtype))
+    lora = lora.reshape(*x.shape[:2], len(_TARGETS), rw.mix_lora)
+    adj = jnp.einsum("bstr,trd->bstd", lora, p["mix_lora_b"].astype(x.dtype))
+    out = {}
+    for i, t in enumerate(_TARGETS):
+        mix = p["mix_bias"][i][None, None].astype(x.dtype) + adj[:, :, i]
+        out[t] = x + dx * mix
+    return out
+
+
+def rwkv_apply(
+    p: Dict,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    ranks: Optional[Dict[str, Array]] = None,
+    state: Optional[Dict[str, Array]] = None,
+) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    """Full RWKV6 block (time-mix + channel-mix, each pre-norm residual).
+
+    state (decode): {'shift_t','shift_c': (B,D), 'wkv': (B,H,N,N)}.
+    Includes the two pre-norms and residuals (norm scales in p['ln_t'/'ln_c']).
+    """
+    rw = cfg.rwkv
+    r_ = ranks or {}
+    d = cfg.d_model
+    h = d // rw.head_dim
+    n = rw.head_dim
+    bsz, seqlen, _ = x.shape
+    tp = p["time"]
+
+    # ---- time mix ----
+    x_res = x
+    x = cm.rms_norm(x, p["ln_t"], eps=cfg.norm_eps)
+    shift_t_out = x[:, -1]
+    prev_t = None if state is None else state["shift_t"].astype(x.dtype)
+    x_prev = _token_shift(x, prev_t)
+    mixed = _ddlerp(x, x_prev, tp, rw)
+
+    rr = linear(tp["r"], mixed["r"], rank=cm.rget(r_,"time","r"), tap="time/r").reshape(bsz, seqlen, h, n)
+    kk = linear(tp["k"], mixed["k"], rank=cm.rget(r_,"time","k"), tap="time/k").reshape(bsz, seqlen, h, n)
+    vv = linear(tp["v"], mixed["v"], rank=cm.rget(r_,"time","v"), tap="time/v").reshape(bsz, seqlen, h, n)
+    gg = linear(tp["g"], mixed["g"], rank=cm.rget(r_,"time","g"), tap="time/g")
+
+    decay_in = tp["decay_base"][None, None].astype(x.dtype) + jnp.tanh(
+        mixed["w"] @ tp["decay_lora_a"].astype(x.dtype)) @ tp["decay_lora_b"].astype(x.dtype)
+    w = jnp.exp(-jnp.exp(decay_in.astype(jnp.float32))).reshape(bsz, seqlen, h, n)
+    u = tp["bonus"].reshape(h, n)
+
+    wkv_state = None if state is None else state["wkv"]
+    y, new_wkv = wkv_chunked(rr, kk, vv, w.astype(x.dtype), u,
+                             chunk=rw.chunk, initial_state=wkv_state)
+    y = y.reshape(bsz, seqlen, d)
+    y = cm.rms_norm(y, tp["ln_x"], eps=cfg.norm_eps)  # group-norm stand-in
+    y = y * jax.nn.silu(gg)
+    x = x_res + linear(tp["o"], y, rank=cm.rget(r_,"time","o"), tap="time/o")
+
+    # ---- channel mix ----
+    cp = p["channel"]
+    x_res = x
+    x = cm.rms_norm(x, p["ln_c"], eps=cfg.norm_eps)
+    shift_c_out = x[:, -1]
+    prev_c = None if state is None else state["shift_c"].astype(x.dtype)
+    xc_prev = _token_shift(x, prev_c)
+    dxc = xc_prev - x
+    xk = x + dxc * cp["mix_k"][None, None].astype(x.dtype)
+    xr = x + dxc * cp["mix_r"][None, None].astype(x.dtype)
+    kk_c = jnp.square(jax.nn.relu(linear(cp["k"], xk, rank=cm.rget(r_,"channel","k"), tap="channel/k")))
+    rr_c = jax.nn.sigmoid(linear(cp["r"], xr, rank=cm.rget(r_,"channel","r"), tap="channel/r"))
+    out = x_res + rr_c * linear(cp["v"], kk_c, rank=cm.rget(r_,"channel","v"), tap="channel/v")
+
+    new_state = None
+    if state is not None:
+        new_state = {"shift_t": shift_t_out, "shift_c": shift_c_out, "wkv": new_wkv}
+    return out, new_state
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, *, num_instances: int, dtype=jnp.float32) -> Dict:
+    rw = cfg.rwkv
+    d = cfg.d_model
+    h = d // rw.head_dim
+    return {
+        "shift_t": jnp.zeros((num_instances, batch, d), dtype),
+        "shift_c": jnp.zeros((num_instances, batch, d), dtype),
+        "wkv": jnp.zeros((num_instances, batch, h, rw.head_dim, rw.head_dim), jnp.float32),
+    }

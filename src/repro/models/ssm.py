@@ -1,0 +1,163 @@
+"""Mamba2 (SSD) block — chunked state-space scan, TPU-friendly formulation.
+
+The chunked SSD algorithm (Dao & Gu, 2024) recast for MXU-sized einsums:
+sequence is split into chunks of Q tokens; within a chunk the recurrence is a
+(Q x Q) lower-triangular "attention" against decay weights, across chunks a
+tiny lax.scan carries the (H, N, P) state. All heavy ops are einsums over
+chunk-local tensors, which is exactly what the Pallas kernel in
+``repro.kernels.mamba2_ssd`` tiles through VMEM; this module is the pure-jnp
+reference path used for smoke tests and as kernels/ref oracle.
+
+FlexRank: in/out projections are ordinary dense leaves -> factorizable. The
+conv, decay (a_log, dt_bias) and skip (d_skip) params are excluded (not
+matmul weights).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models.common import ParamSpec, linear
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return s, d_inner, n_heads
+
+
+def mamba_spec(cfg: ModelConfig) -> Dict:
+    s, d_inner, n_heads = _dims(cfg)
+    d = cfg.d_model
+    conv_dim = d_inner + 2 * s.num_groups * s.state_dim
+    return {
+        "in_proj": {"w": ParamSpec(
+            (d, 2 * d_inner + 2 * s.num_groups * s.state_dim + n_heads),
+            (cm.EMBED, cm.MLP))},
+        "conv": ParamSpec((s.conv_width, conv_dim), (cm.CONV, cm.MLP), "normal"),
+        "a_log": ParamSpec((n_heads,), (cm.HEADS,), "zeros"),
+        "dt_bias": ParamSpec((n_heads,), (cm.HEADS,), "zeros"),
+        "d_skip": ParamSpec((n_heads,), (cm.HEADS,), "ones"),
+        "gate_norm": ParamSpec((d_inner,), (cm.MLP,), "zeros"),
+        "out_proj": {"w": ParamSpec((d_inner, d), (cm.MLP, cm.EMBED))},
+    }
+
+
+def _causal_conv(x: Array, w: Array, state: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Depthwise causal conv, width K. x: (B, S, C); w: (K, C).
+
+    Returns (y, new_state) with state = last K-1 inputs (decode carry).
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(x: Array, dt: Array, a: Array, b: Array, c: Array, *, chunk: int,
+                initial_state: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Chunked selective-state-space scan.
+
+    x: (B, S, H, P)   inputs per head
+    dt: (B, S, H)     positive step sizes (post-softplus)
+    a: (H,)           negative decay rates (-exp(a_log))
+    b, c: (B, S, G, N) input/output projections (G groups broadcast over H)
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    bb, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    q = min(chunk, s)
+    nc = s // q
+    assert s % q == 0, (s, q)
+    rep = h // g
+
+    xl = jnp.moveaxis(x.reshape(bb, nc, q, h, p), 1, 0)          # (nc,B,Q,H,P)
+    dtl = jnp.moveaxis(dt.reshape(bb, nc, q, h), 1, 0)           # (nc,B,Q,H)
+    bl = jnp.moveaxis(jnp.repeat(b.reshape(bb, nc, q, g, n), rep, axis=3), 1, 0)
+    cl = jnp.moveaxis(jnp.repeat(c.reshape(bb, nc, q, g, n), rep, axis=3), 1, 0)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def one_chunk(state, xs):
+        x_c, dt_c, b_c, c_c = xs                         # (B,Q,H,P) etc.
+        da = dt_c * a[None, None, :]                     # (B,Q,H) log-decay
+        cum = jnp.cumsum(da, axis=1)                     # inclusive
+        xdt = x_c * dt_c[..., None]
+        # intra-chunk: decay(i<-j) = exp(cum_i - cum_j) for i >= j
+        rel = cum[:, :, None, :] - cum[:, None, :, :]    # (B,Qi,Qj,H)
+        l_mat = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0).astype(x.dtype)
+        scores = jnp.einsum("bihn,bjhn->bijh", c_c, b_c)  # C_i . B_j
+        y_c = jnp.einsum("bijh,bijh,bjhp->bihp", scores, l_mat, xdt)
+        # inter-chunk: y_i += C_i . (exp(cum_i) * state)
+        decay_in = jnp.exp(cum).astype(x.dtype)
+        y_c = y_c + jnp.einsum("bihn,bih,bhnp->bihp", c_c, decay_in, state)
+        # state update: S <- exp(cum_end) S + sum_j exp(cum_end - cum_j) B_j xdt_j^T
+        to_end = jnp.exp(cum[:, -1:, :] - cum).astype(x.dtype)
+        s_c = jnp.einsum("bjh,bjhn,bjhp->bhnp", to_end, b_c, xdt)
+        new_state = state * jnp.exp(cum[:, -1, :])[:, :, None, None].astype(state.dtype) + s_c.astype(state.dtype)
+        return new_state, y_c.astype(x.dtype)
+
+    init = initial_state if initial_state is not None else jnp.zeros((bb, h, n, p), x.dtype)
+    final, ys = jax.lax.scan(one_chunk, init, (xl, dtl, bl, cl))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bb, s, h, p)
+    return y, final
+
+
+def mamba_apply(
+    p: Dict,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    ranks: Optional[Dict[str, Array]] = None,
+    state: Optional[Dict[str, Array]] = None,
+) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    """Mamba2 block. state (decode): {'conv': (B,K-1,C), 'ssd': (B,H,N,P)}."""
+    s, d_inner, n_heads = _dims(cfg)
+    r = ranks or {}
+    bsz, seqlen, _ = x.shape
+
+    zxbcdt = linear(p["in_proj"], x, rank=r.get("in_proj"), tap="in_proj")
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * s.num_groups * s.state_dim], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv"], None if state is None else state["conv"])
+    xs, b, c = jnp.split(xbc, [d_inner, d_inner + s.num_groups * s.state_dim], axis=-1)
+
+    xs = xs.reshape(bsz, seqlen, n_heads, s.head_dim)
+    b = b.reshape(bsz, seqlen, s.num_groups, s.state_dim)
+    c = c.reshape(bsz, seqlen, s.num_groups, s.state_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None]).astype(x.dtype)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32)).astype(x.dtype)
+
+    if state is None:
+        y, final = ssd_chunked(xs, dt, a, b, c, chunk=s.chunk)
+        new_state = None
+    else:
+        # decode: seqlen may be 1..chunk; single-chunk path with carried state
+        y, final = ssd_chunked(xs, dt, a, b, c, chunk=seqlen, initial_state=state["ssd"])
+        new_state = {"conv": new_conv, "ssd": final}
+
+    y = y + xs * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, seqlen, d_inner)
+    y = cm.rms_norm(y * jax.nn.silu(z), p["gate_norm"], eps=cfg.norm_eps)
+    out = linear(p["out_proj"], y, rank=r.get("out_proj"), tap="out_proj")
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, *, num_instances: int, dtype=jnp.float32) -> Dict:
+    s, d_inner, n_heads = _dims(cfg)
+    conv_dim = d_inner + 2 * s.num_groups * s.state_dim
+    return {
+        "conv": jnp.zeros((num_instances, batch, s.conv_width - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((num_instances, batch, n_heads, s.state_dim, s.head_dim), dtype),
+    }

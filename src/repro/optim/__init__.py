@@ -1,0 +1,4 @@
+"""Optimizers: AdamW + schedules, PowerSGD gradient compression."""
+from repro.optim import adamw, compression, muon
+from repro.optim.adamw import AdamWConfig, AdamWState, apply_updates, init
+

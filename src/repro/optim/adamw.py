@@ -1,0 +1,115 @@
+"""AdamW + schedules + global-norm clipping + gradient accumulation.
+
+Self-contained (no optax in this container). The optimizer state is a pytree
+matching params, so it shards/checkpoints with the same machinery as params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-5                       # paper App. D.3 default
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 715                # paper App. D.3
+    total_steps: int = 10_000
+    schedule: str = "cosine"               # cosine | linear | constant
+    min_lr_ratio: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: Array) -> Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = 1.0 - (1.0 - cfg.min_lr_ratio) * frac
+    else:  # cosine
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> Tuple[PyTree, Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), tree), norm
+
+
+def init(params: PyTree) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def _is_matrix(p: Array) -> bool:
+    return p.ndim >= 2
+
+
+def apply_updates(params: PyTree, grads: PyTree, state: AdamWState,
+                  cfg: AdamWConfig) -> Tuple[PyTree, AdamWState, dict]:
+    """One AdamW step; decoupled weight decay on matrix params only."""
+    if cfg.clip_norm:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g32
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g32 * g32
+        delta = (mu / b1c) / (jnp.sqrt(nu / b2c) + cfg.eps)
+        if cfg.weight_decay and _is_matrix(p):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, mu=new_mu, nu=new_nu), metrics
+
+
+def accumulate_grads(grad_fn: Callable, params: PyTree, batches, *args) -> PyTree:
+    """Host-side microbatch accumulation (mean over microbatches)."""
+    total = None
+    for b in batches:
+        g = grad_fn(params, b, *args)
+        total = g if total is None else jax.tree.map(jnp.add, total, g)
+    return jax.tree.map(lambda x: x / len(batches), total)

@@ -1,0 +1,116 @@
+"""PowerSGD-style low-rank gradient compression for cross-pod all-reduce.
+
+A distributed-optimization trick thematically matched to the paper: just as
+FlexRank shows model weights live near low-rank manifolds, gradient updates do
+too — PowerSGD (Vogels et al., 2019) exploits this to shrink data-parallel
+all-reduce volume by O(min(m,n)/r).
+
+Usage in the training step (see launch/train.py --grad-compress):
+  1. per-shard gradients G (m, n) are compressed: P = G Q ; all-reduce P
+  2. orthonormalize P ; Q' = G^T P ; all-reduce Q'
+  3. Ghat = P Q'^T ; error feedback keeps the residual for the next step.
+
+Cross-pod (the slow DCI links between pods) is exactly where the 2 * r(m+n)
+vs m*n traffic reduction pays — the dry-run's collective-bytes analysis in
+EXPERIMENTS.md §Perf quantifies it per architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerSGDConfig:
+    rank: int = 8
+    min_compress_size: int = 1 << 16   # don't compress small tensors
+    ef: bool = True                    # error feedback
+
+
+class PowerSGDState(NamedTuple):
+    q: PyTree          # per-leaf Q matrices (or None placeholders)
+    error: PyTree      # error-feedback residuals
+
+
+def _eligible(p: Array, cfg: PowerSGDConfig) -> bool:
+    return p.ndim >= 2 and p.size >= cfg.min_compress_size
+
+
+def _as_matrix(g: Array) -> Array:
+    return g.reshape(g.shape[0], -1) if g.ndim != 2 else g
+
+
+def _orthonormalize(p: Array) -> Array:
+    q, _ = jnp.linalg.qr(p)
+    return q
+
+
+def init(params: PyTree, cfg: PowerSGDConfig, seed: int = 0) -> PowerSGDState:
+    key = jax.random.PRNGKey(seed)
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    qs, errs = [], []
+    for k, p in zip(keys, leaves):
+        if _eligible(p, cfg):
+            m = _as_matrix(p)
+            qs.append(jax.random.normal(k, (m.shape[1], cfg.rank), jnp.float32))
+            errs.append(jnp.zeros(p.shape, jnp.float32))
+        else:
+            qs.append(jnp.zeros((0,), jnp.float32))
+            errs.append(jnp.zeros((0,), jnp.float32))
+    return PowerSGDState(q=jax.tree.unflatten(treedef, qs),
+                         error=jax.tree.unflatten(treedef, errs))
+
+
+def compress_decompress(
+    grads: PyTree,
+    state: PowerSGDState,
+    cfg: PowerSGDConfig,
+    *,
+    axis_name: Optional[str] = None,
+) -> Tuple[PyTree, PowerSGDState, dict]:
+    """Rank-r approximate all-reduce of ``grads`` (identity mean when
+    axis_name is None — lets the same code run in tests and under shard_map).
+
+    Returns (approx-mean grads, new state, metrics with bytes saved).
+    """
+    def pmean(x):
+        return jax.lax.pmean(x, axis_name) if axis_name else x
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_q = jax.tree.leaves(state.q)
+    flat_e = jax.tree.leaves(state.error)
+    out_g, out_q, out_e = [], [], []
+    raw_bytes = comp_bytes = 0
+
+    for g, q, e in zip(flat_g, flat_q, flat_e):
+        if q.size == 0:
+            out_g.append(pmean(g))
+            out_q.append(q)
+            out_e.append(e)
+            raw_bytes += g.size * 4
+            comp_bytes += g.size * 4
+            continue
+        gm = _as_matrix(g.astype(jnp.float32) + (e.astype(jnp.float32) if cfg.ef else 0.0))
+        p = pmean(gm @ q)                     # (m, r) all-reduced
+        p = _orthonormalize(p)
+        q_new = pmean(gm.T @ p)               # (n, r) all-reduced
+        ghat = (p @ q_new.T).reshape(g.shape)
+        out_g.append(ghat.astype(g.dtype))
+        out_q.append(q_new)
+        out_e.append((gm.reshape(g.shape) - ghat) if cfg.ef else e)
+        raw_bytes += gm.size * 4
+        comp_bytes += (p.size + q_new.size) * 4
+
+    metrics = {"powersgd_raw_bytes": raw_bytes, "powersgd_comp_bytes": comp_bytes,
+               "powersgd_ratio": comp_bytes / max(raw_bytes, 1)}
+    return (jax.tree.unflatten(treedef, out_g),
+            PowerSGDState(q=jax.tree.unflatten(treedef, out_q),
+                          error=jax.tree.unflatten(treedef, out_e)),
+            metrics)

@@ -1,0 +1,107 @@
+"""Batched elastic serving engine.
+
+Holds one set of FlexRank shared weights plus the nested profile table; each
+request names a budget, the engine realizes the submodel via GAR (cached per
+budget — "train once, deploy everywhere") and serves prefill + decode with a
+static-shape batch slot model (requests are padded into fixed (B, S) slots,
+the standard TPU serving discipline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import flexrank as FR
+from repro.models import common as cm
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (S_prompt,) int32
+    max_new_tokens: int = 16
+    budget: float = 1.0         # relative size in (0, 1]
+
+
+@dataclasses.dataclass
+class Result:
+    tokens: np.ndarray
+    budget_row: int
+    deployed_params: int
+
+
+class ElasticEngine:
+    def __init__(self, cfg: ModelConfig, params_fact, table, infos, *,
+                 max_batch: int = 8, max_len: int = 256):
+        self.cfg = cfg
+        self.params_fact = params_fact
+        self.table = table
+        self.infos = infos
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self._deployed: Dict[int, object] = {}
+        self._decode_jit = jax.jit(
+            lambda p, st, tok: tfm.decode_step(p, self.cfg, st, tok))
+
+    def _budget_row(self, budget: float) -> int:
+        costs = [FR.deployed_param_count(self.cfg, self.infos, self.table, k)
+                 for k in range(self.table.table.shape[0])]
+        full = costs[-1]
+        feasible = [k for k, c in enumerate(costs) if c <= budget * full + 1]
+        return feasible[-1] if feasible else 0
+
+    def _realize(self, row: int):
+        """GAR-deploy the budget row (cached) — paper Algorithm 1 'deploy'."""
+        if row not in self._deployed:
+            self._deployed[row] = FR.gar_deploy(
+                self.params_fact, self.cfg, self.infos, self.table, row)
+        return self._deployed[row]
+
+    def generate(self, requests: List[Request]) -> List[Result]:
+        out: List[Optional[Result]] = [None] * len(requests)
+        # group by realized budget row -> one batch per submodel
+        rows: Dict[int, List[int]] = {}
+        for i, r in enumerate(requests):
+            rows.setdefault(self._budget_row(r.budget), []).append(i)
+        for row, idxs in rows.items():
+            params = self._realize(row)
+            results = self._serve_batch(params, row, [requests[i] for i in idxs])
+            for i, res in zip(idxs, results):
+                out[i] = res
+        return out  # type: ignore[return-value]
+
+    def _serve_batch(self, params, row: int, reqs: List[Request]) -> List[Result]:
+        results = []
+        for chunk_start in range(0, len(reqs), self.max_batch):
+            chunk = reqs[chunk_start: chunk_start + self.max_batch]
+            b = len(chunk)
+            state = tfm.init_decode_state(self.cfg, b, self.max_len, dtype=jnp.float32)
+            toks = [list(map(int, r.prompt)) for r in chunk]
+            max_new = max(r.max_new_tokens for r in chunk)
+            # teacher-forced prefill through the decode path (single engine path)
+            plen = max(len(t) for t in toks)
+            padded = np.zeros((b, plen), np.int32)
+            for i, t in enumerate(toks):
+                padded[i, : len(t)] = t
+            cur = jnp.asarray(padded[:, :1])
+            outs = [padded[:, :1]]
+            for pos in range(plen + max_new - 1):
+                logits, state = self._decode_jit(params, state, cur)
+                nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)[:, None]
+                if pos + 1 < plen:
+                    cur = jnp.asarray(padded[:, pos + 1: pos + 2])  # teacher-forced
+                    outs.append(np.asarray(cur))
+                else:
+                    cur = jnp.asarray(nxt)
+                    outs.append(nxt)
+            seq = np.concatenate(outs, axis=1)
+            dp = FR.deployed_param_count(self.cfg, self.infos, self.table, row)
+            for i, r in enumerate(chunk):
+                results.append(Result(tokens=seq[i, : len(toks[i]) + r.max_new_tokens],
+                                      budget_row=row, deployed_params=dp))
+        return results

@@ -1,0 +1,153 @@
+"""Per-kernel shape/dtype sweeps: pallas (interpret=True) vs ref.py oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _arr(*s, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(s).astype(dtype))
+
+
+TOLS = {jnp.float32: 2e-4, jnp.bfloat16: 6e-2}
+
+
+# ------------------------------------------------------------- gar_matmul
+
+@pytest.mark.parametrize("t,n,m,r", [(64, 32, 48, 16), (100, 96, 80, 40),
+                                     (33, 17, 29, 7), (256, 128, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gar_matmul_sweep(t, n, m, r, dtype):
+    x = _arr(t, n).astype(dtype)
+    v = _arr(n, r).astype(dtype)
+    u = _arr(m - r, r).astype(dtype)
+    perm_inv = jnp.asarray(RNG.permutation(m).astype(np.int32))
+    y_ref = ops.gar_forward(x, v, u, perm_inv, use_pallas=False)
+    y_ker = ops.gar_forward(x, v, u, perm_inv, use_pallas="interpret",
+                            bt=32, br=8)
+    scale = float(jnp.abs(y_ref.astype(jnp.float32)).max()) + 1e-6
+    err = float(jnp.abs(y_ref.astype(jnp.float32) - y_ker.astype(jnp.float32)).max())
+    assert err / scale < TOLS[dtype], (err, scale)
+
+
+def test_gar_matches_dense_reconstruction():
+    """GAR kernel output == dense W_r matmul (paper §3.5 exactness)."""
+    from repro.core.gar import gar_transform
+    u_full = _arr(40, 24)
+    v_full = _arr(32, 24)
+    g = gar_transform(u_full, v_full, 12)
+    x = _arr(16, 32)
+    w_r = np.asarray(u_full)[:, :12] @ np.asarray(v_full)[:, :12].T
+    y = ops.gar_forward(x, g.v_tilde, g.u_hat, jnp.argsort(g.perm),
+                        use_pallas="interpret", bt=16, br=4)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) @ w_r.T,
+                               rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------- lowrank_matmul
+
+@pytest.mark.parametrize("t,n,m,r", [(64, 32, 48, 16), (70, 64, 96, 48)])
+@pytest.mark.parametrize("rank", [None, 1, 5, "full"])
+def test_lowrank_matmul_sweep(t, n, m, r, rank):
+    x, v, u = _arr(t, n), _arr(n, r), _arr(m, r)
+    rk = r if rank == "full" else rank
+    y_ref = ops.lowrank_forward(x, v, u, rk, use_pallas=False)
+    y_ker = ops.lowrank_forward(x, v, u, rk, use_pallas="interpret", bt=16, br=16)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_lowrank_mask_traced_rank():
+    """rank as a traced scalar (the consolidation-training path)."""
+    x, v, u = _arr(32, 16), _arr(16, 8), _arr(24, 8)
+
+    @jax.jit
+    def f(rank):
+        return ops.lowrank_forward(x, v, u, rank, use_pallas="interpret",
+                                   bt=16, br=8)
+
+    for rk in (1, 3, 8):
+        np.testing.assert_allclose(
+            np.asarray(f(jnp.asarray(rk))),
+            np.asarray(ops.lowrank_forward(x, v, u, rk, use_pallas=False)),
+            rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------------ wkv6
+
+@pytest.mark.parametrize("b,s,h,n,chunk", [(2, 50, 3, 8, 16), (1, 64, 2, 16, 64),
+                                           (2, 33, 1, 4, 8)])
+def test_wkv6_sweep(b, s, h, n, chunk):
+    r = _arr(b, s, h, n)
+    k = _arr(b, s, h, n)
+    v = _arr(b, s, h, n)
+    w = jnp.asarray(np.exp(-np.exp(RNG.standard_normal((b, s, h, n)))).astype(np.float32))
+    u = _arr(h, n)
+    y_ref = ops.wkv6_forward(r, k, v, w, u, use_pallas=False)
+    y_ker = ops.wkv6_forward(r, k, v, w, u, chunk=chunk, use_pallas="interpret")
+    scale = float(jnp.abs(y_ref).max()) + 1e-6
+    assert float(jnp.abs(y_ref - y_ker).max()) / scale < 1e-4
+
+
+def test_wkv6_model_chunked_matches_sequential():
+    from repro.models.rwkv import wkv_chunked
+    b, s, h, n = 2, 40, 2, 8
+    r, k, v = _arr(b, s, h, n), _arr(b, s, h, n), _arr(b, s, h, n)
+    w = jnp.asarray(np.exp(-np.exp(RNG.standard_normal((b, s, h, n)))).astype(np.float32))
+    u = _arr(h, n)
+    y_seq = ops.wkv6_forward(r, k, v, w, u, use_pallas=False)
+    y_chk, _ = wkv_chunked(r, k, v, w, u, chunk=10)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_seq),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------------- ssd
+
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [(2, 60, 4, 16, 2, 8, 20),
+                                               (1, 48, 2, 8, 1, 16, 16),
+                                               (2, 37, 3, 8, 3, 4, 8)])
+def test_ssd_sweep(b, s, h, p, g, n, chunk):
+    x = _arr(b, s, h, p)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((b, s, h))).astype(np.float32) * 0.5)
+    a = jnp.asarray(-np.abs(RNG.standard_normal(h)).astype(np.float32))
+    bb = _arr(b, s, g, n)
+    cc = _arr(b, s, g, n)
+    y_ref = ops.ssd_forward(x, dt, a, bb, cc, use_pallas=False)
+    y_ker = ops.ssd_forward(x, dt, a, bb, cc, chunk=chunk, use_pallas="interpret")
+    scale = float(jnp.abs(y_ref).max()) + 1e-6
+    assert float(jnp.abs(y_ref - y_ker).max()) / scale < 1e-4
+
+
+def test_ssd_model_chunked_matches_sequential():
+    from repro.models.ssm import ssd_chunked
+    b, s, h, p, g, n = 2, 36, 2, 8, 1, 4
+    x = _arr(b, s, h, p)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((b, s, h))).astype(np.float32) * 0.5)
+    a = jnp.asarray(-np.abs(RNG.standard_normal(h)).astype(np.float32))
+    bb, cc = _arr(b, s, g, n), _arr(b, s, g, n)
+    y_seq = ops.ssd_forward(x, dt, a, bb, cc, use_pallas=False)
+    y_chk, _ = ssd_chunked(x, dt, a, bb, cc, chunk=12)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_seq),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_state_carry_matches_split_run():
+    """Running 2 halves with carried state == one run (decode correctness)."""
+    from repro.models.ssm import ssd_chunked
+    b, s, h, p, g, n = 1, 32, 2, 4, 1, 4
+    x = _arr(b, s, h, p)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((b, s, h))).astype(np.float32) * 0.3)
+    a = jnp.asarray(-np.abs(RNG.standard_normal(h)).astype(np.float32))
+    bb, cc = _arr(b, s, g, n), _arr(b, s, g, n)
+    y_full, st_full = ssd_chunked(x, dt, a, bb, cc, chunk=8)
+    y1, st1 = ssd_chunked(x[:, :16], dt[:, :16], a, bb[:, :16], cc[:, :16], chunk=8)
+    y2, st2 = ssd_chunked(x[:, 16:], dt[:, 16:], a, bb[:, 16:], cc[:, 16:],
+                          chunk=8, initial_state=st1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,164 @@
+"""Model zoo: forward smoke per arch, decode parity, sliding windows, remat."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, shapes_for
+from repro.models import common as cm
+from repro.models import transformer as T
+
+PARITY_ARCHS = ("llama4-scout-17b-a16e", "gemma3-27b", "zamba2-7b",
+                "rwkv6-3b", "minicpm3-4b", "seamless-m4t-medium")
+
+
+def _setup(arch, no_drop=False):
+    cfg = get_config(arch, smoke=True)
+    if no_drop and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         capacity_factor=float(cfg.moe.num_experts)))
+    params = cm.instantiate(T.model_spec(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _frontend(cfg, b=2, n=8):
+    if cfg.family in ("audio", "vlm"):
+        return jax.random.normal(jax.random.PRNGKey(2), (b, n, cfg.frontend_dim))
+    return None
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_smoke(arch):
+    """Assigned-arch smoke: one forward, output shapes, no NaNs (deliverable f)."""
+    cfg, params = _setup(arch)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)
+    logits, aux = T.forward(params, cfg, tokens, frontend=_frontend(cfg))
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step_smoke(arch):
+    """One CPU train step per arch: grads flow, loss finite (deliverable f)."""
+    from repro.launch import specs as SP
+    from repro.optim import adamw
+    cfg, params = _setup(arch)
+    opt = adamw.init(params)
+    step = SP.make_train_step(cfg, adamw.AdamWConfig(lr=1e-3, warmup_steps=1,
+                                                     total_steps=10))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0,
+                                          cfg.vocab_size)}
+    fr = _frontend(cfg, 2, 8)
+    if fr is not None:
+        batch["frontend"] = fr
+    params2, opt2, metrics = step(params, opt, batch, jax.random.PRNGKey(2))
+    assert np.isfinite(float(metrics["loss"]))
+    # at least one param changed
+    diffs = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), params, params2)
+    assert max(jax.tree.leaves(diffs)) > 0
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg, params = _setup(arch, no_drop=True)
+    S = 10
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0, cfg.vocab_size)
+    fr = _frontend(cfg)
+    kv_src = None
+    if cfg.family == "audio":
+        kv_src = T.run_encoder(params, cfg, fr)
+    elif cfg.family == "vlm":
+        kv_src = fr
+    full, _ = T.forward(params, cfg, tokens, frontend=fr)
+    state = T.init_decode_state(cfg, 2, S, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        lg, state = T.decode_step(params, cfg, state, tokens[:, t:t + 1],
+                                  kv_source=kv_src)
+        outs.append(np.asarray(lg[:, 0]))
+    dec = np.stack(outs, axis=1)
+    rel = np.abs(dec - np.asarray(full)).max() / (np.abs(np.asarray(full)).max() + 1e-9)
+    assert rel < 2e-2, rel
+
+
+def test_sliding_window_masks_old_tokens():
+    """gemma3-style local layers must not see beyond the window."""
+    cfg, params = _setup("gemma3-27b")  # local_window=16, global_every=6
+    S = 40
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab_size)
+    # perturb a token far outside every local window of the last position
+    t2 = t1.at[0, 0].set((t1[0, 0] + 7) % cfg.vocab_size)
+    # global_every > depth => every layer local (0 would mean all-global)
+    cfg_local = dataclasses.replace(cfg, global_every=999, local_window=16)
+    l1, _ = T.forward(params, cfg_local, t1)
+    l2, _ = T.forward(params, cfg_local, t2)
+    # all-local model: last position (distance 39 > 16) cannot change...
+    # ...except through depth-wise receptive field growth; with 6 layers x 16
+    # window the horizon is 96 > 39, so instead check a 1-layer variant.
+    cfg1 = dataclasses.replace(cfg_local, segments=(cfg.segments[0].__class__("attn", 1),),
+                               num_layers=1)
+    p1 = cm.instantiate(T.model_spec(cfg1), jax.random.PRNGKey(0))
+    a, _ = T.forward(p1, cfg1, t1)
+    b, _ = T.forward(p1, cfg1, t2)
+    assert np.abs(np.asarray(a[0, -1]) - np.asarray(b[0, -1])).max() < 1e-5
+    assert np.abs(np.asarray(a[0, 5]) - np.asarray(b[0, 5])).max() > 1e-6
+
+
+def test_window_schedule_5to1():
+    cfg = get_config("gemma3-27b")
+    w = np.asarray(T.window_schedule(cfg, 12))
+    assert (w == T.GLOBAL_WINDOW).sum() == 2          # layers 6 and 12
+    assert (w == cfg.local_window).sum() == 10
+
+
+def test_remat_preserves_values():
+    cfg, params = _setup("stablelm-1.6b")
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    base, _ = T.forward(params, cfg, tokens)
+    with T.remat_blocks():
+        remat, _ = jax.jit(lambda p, t: T.forward(p, cfg, t))(params, tokens)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(remat),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_positions_offset_decode_rope():
+    """RoPE must use absolute positions in decode (cache idx), not zeros."""
+    cfg, params = _setup("deepseek-7b")
+    S = 6
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab_size)
+    full, _ = T.forward(params, cfg, tokens)
+    state = T.init_decode_state(cfg, 1, S, dtype=jnp.float32)
+    for t in range(S):
+        lg, state = T.decode_step(params, cfg, state, tokens[:, t:t + 1])
+    np.testing.assert_allclose(np.asarray(lg[0, 0]), np.asarray(full[0, -1]),
+                               rtol=2e-2, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["llama-3.2-vision-11b", "seamless-m4t-medium"])
+def test_cached_cross_kv_decode_parity(arch):
+    """§Perf cell D: precomputed cross-KV decode == full forward (exact)."""
+    cfg, params = _setup(arch)
+    S = 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0, cfg.vocab_size)
+    fr = jax.random.normal(jax.random.PRNGKey(2), (2, 8, cfg.frontend_dim))
+    if cfg.family == "audio":
+        kv_proj = T.run_encoder(params, cfg, fr)
+    else:
+        from repro.models.common import linear
+        kv_proj = linear(params["frontend_proj"], fr)
+    full, _ = T.forward(params, cfg, tokens, frontend=fr)
+    state = T.init_decode_state(cfg, 2, S, dtype=jnp.float32, cross_kv_len=8)
+    state = T.attach_cross_kv(params, cfg, state, kv_proj)
+    assert T.has_cross_kv(state)
+    outs = []
+    for t in range(S):
+        # NOTE: no kv_source — the cached cross-KV carries it
+        lg, state = T.decode_step(params, cfg, state, tokens[:, t:t + 1])
+        outs.append(np.asarray(lg[:, 0]))
+    rel = (np.abs(np.stack(outs, 1) - np.asarray(full)).max()
+           / np.abs(np.asarray(full)).max())
+    assert rel < 2e-2, rel

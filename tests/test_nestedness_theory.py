@@ -1,0 +1,75 @@
+"""The paper's §4 theory as executable assertions (Thms 4.1-4.3, Fig. 2)."""
+import numpy as np
+import pytest
+
+from repro.core import nestedness as NS
+
+
+@pytest.fixture(scope="module")
+def m_star():
+    return NS.make_target(np.random.default_rng(7), 6, 5, decay=1.2)
+
+
+@pytest.fixture(scope="module")
+def trained(m_star):
+    return {
+        "pts": NS.train(NS.pts_loss, m_star, steps=2500, seed=1),
+        "asl": NS.train(NS.asl_loss, m_star, steps=2500, seed=1),
+        "nsl": NS.train(NS.nsl_loss, m_star, steps=2500, seed=1),
+    }
+
+
+def test_all_reach_reasonable_full_fit(trained, m_star):
+    # PTS/NSL reconstruct M* at full rank; ASL provably cannot (Thm B.7)
+    for name in ("pts", "nsl"):
+        p = trained[name]
+        w = np.asarray(p.u) @ np.asarray(p.v).T
+        assert np.linalg.norm(w - m_star) < 5e-2, name
+
+
+def test_thm41_pts_has_positive_gap(trained, m_star):
+    """PTS: measure-zero chance of zero submodel gap at r < k."""
+    gaps = NS.pareto_gaps(trained["pts"], m_star)
+    assert gaps[:-1].max() > 1e-3          # some reduced rank is strictly bad
+    assert gaps[-1] < 5e-3                 # full rank is recovered
+
+
+def test_thm42_asl_gap_lower_bound(trained, m_star):
+    """ASL: E(U,V,r) >= (r*lambda - sum_i sigma_i)^2 / k."""
+    p = trained["asl"]
+    k = min(m_star.shape)
+    sig = np.linalg.svd(m_star, compute_uv=False)
+    lam = np.linalg.svd(np.asarray(p.u) @ np.asarray(p.v).T,
+                        compute_uv=False).sum() / k
+    gaps = NS.pareto_gaps(p, m_star)
+    for r in range(1, k + 1):
+        bound = (r * lam - sig[:r].sum()) ** 2 / k
+        assert gaps[r - 1] >= bound - 1e-3, (r, gaps[r - 1], bound)
+    assert gaps.max() > 1e-4
+
+
+def test_thm43_nsl_recovers_pareto_front(trained, m_star):
+    """NSL: E(U,V,r) == 0 for every r — the paper's core result."""
+    gaps = NS.pareto_gaps(trained["nsl"], m_star)
+    assert gaps.max() < 5e-3, gaps
+
+
+def test_asl_closed_form_matches_sampled_expectation():
+    """Lemma B.4: the Bernoulli rank-dropout identity."""
+    rng = np.random.default_rng(3)
+    m, n, k = 5, 4, 4
+    u = rng.standard_normal((m, k)).astype(np.float32)
+    v = rng.standard_normal((n, k)).astype(np.float32)
+    m_star = rng.standard_normal((m, n)).astype(np.float32)
+    import itertools
+    import jax.numpy as jnp
+    total = 0.0
+    for bits in itertools.product([0, 1], repeat=k):
+        pi = np.diag(bits).astype(np.float32)
+        total += np.sum((u @ pi @ v.T - m_star) ** 2)
+    expectation = total / 2 ** k
+    closed = float(NS.asl_loss(NS.LinearElastic(jnp.asarray(u), jnp.asarray(v)),
+                               jnp.asarray(m_star)))
+    # Lemma B.3: closed form == expectation up to the empty-mask shift
+    shift = np.sum(m_star ** 2) / 2 ** k
+    np.testing.assert_allclose(closed, expectation, rtol=1e-4)

@@ -1,0 +1,143 @@
+"""End-to-end behaviour tests: the paper's pipeline on real (smoke) configs,
+FlexRank applicability across the assigned-architecture pool, and an
+8-device dry-run of the production launcher machinery (subprocess, so the
+forced device count never leaks into this test process).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, shapes_for
+from repro.core import flexrank as FR
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_flexrank_groups_exist_for_every_arch(arch):
+    """DESIGN.md §Arch-applicability: factorization applies everywhere."""
+    cfg = get_config(arch, smoke=True)
+    infos = FR.group_infos(cfg)
+    assert len(infos) >= 4, arch
+    # exclusions respected
+    for i in infos:
+        assert not any(t in i.path for t in cfg.flexrank.exclude), i.path
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "llama4-scout-17b-a16e"])
+def test_flexrank_masked_forward_on_nontrivial_family(arch):
+    """Technique applies to attention-free and MoE families alike."""
+    from repro.core.profiles import uniform_table
+    from repro.models import common as cm
+    from repro.models import transformer as T
+    cfg = get_config(arch, smoke=True)
+    fact_spec = FR.factorized_spec(cfg)
+    params = cm.instantiate(fact_spec, jax.random.PRNGKey(0))
+    infos = FR.group_infos(cfg)
+    tbl = uniform_table([i.path for i in infos], [i.full_rank for i in infos],
+                        cfg.flexrank.budgets)
+    ranks = FR.ranks_tree(cfg, infos, jnp.asarray(tbl.table), jnp.asarray(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    logits, _ = T.forward(params, cfg, tokens, ranks=ranks)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+
+
+def test_long_context_skip_rule():
+    names = {a: [s.name for s in shapes_for(a)] for a in ASSIGNED_ARCHS}
+    assert "long_500k" in names["zamba2-7b"]
+    assert "long_500k" in names["rwkv6-3b"]
+    assert all("long_500k" not in v for k, v in names.items()
+               if k not in ("zamba2-7b", "rwkv6-3b"))
+
+
+@pytest.mark.slow
+def test_dryrun_machinery_8device_subprocess(tmp_path):
+    """The production lower+compile+analysis path on a tiny forced mesh."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json, jax
+        from repro.configs import get_config
+        from repro.configs.base import ShapeConfig
+        from repro.launch import dryrun as DR
+        from repro.launch.mesh import make_mesh
+        cfg = get_config("deepseek-7b", smoke=True)
+        sh = ShapeConfig("t", 64, 8, "train")
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        lowered = DR.lower_cell(cfg, sh, mesh, "dense")
+        compiled = lowered.compile()
+        coll = DR.parse_collective_bytes(compiled.as_text())
+        cost = compiled.cost_analysis()
+        out = {"flops": float(cost.get("flops", 0)),
+               "coll": sum(v for k, v in coll.items() if not k.startswith("_")),
+               "counts": coll["_counts"]}
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["flops"] > 0
+    assert out["coll"] > 0                      # gradient all-reduce exists
+    assert out["counts"]["all-reduce"] > 0
+
+
+def test_dryrun_json_results_if_present():
+    """Validate any committed dry-run results (written by launch/dryrun.py)."""
+    d = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+    if not os.path.isdir(d):
+        pytest.skip("no dry-run results yet")
+    files = [f for f in os.listdir(d) if f.endswith(".json")]
+    assert files
+    bad = []
+    for f in files:
+        r = json.load(open(os.path.join(d, f)))
+        if r.get("status") != "ok":
+            bad.append((f, r.get("error", "")[:120]))
+            continue
+        if r["mode"] == "dense":
+            assert r["hlo_flops_per_device"] > 0, f
+            assert r["bottleneck"] in ("compute", "memory", "collective"), f
+    assert not bad, bad
+
+
+@pytest.mark.slow
+def test_moe_ep_shardmap_matches_global_path(tmp_path):
+    """shard_map EP MoE (§Perf cell B) == global-view path under no-drop
+    capacity, on a real 8-device mesh (subprocess: forced device count)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses, jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.distributed.meshctx import mesh_context
+        from repro.launch.mesh import make_mesh
+        from repro.models import transformer as T, common as cm
+        cfg = get_config("deepseek-moe-16b", smoke=True)
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+        params = cm.instantiate(T.model_spec(cfg), jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                    cfg.vocab_size)
+        ref, _ = T.forward(params, cfg, tokens)
+        with mesh_context(make_mesh((2, 4), ("data", "model"))):
+            out, _ = jax.jit(lambda p, t: T.forward(p, cfg, t))(params, tokens)
+        rel = float(jnp.abs(out - ref).max() / jnp.abs(ref).max())
+        assert rel < 1e-4, rel
+        print("RELOK", rel)
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "RELOK" in res.stdout
