@@ -19,6 +19,7 @@ MODULES = [
     ("fig10_gar_speedup", "benchmarks.gar_speedup"),
     ("tab1_elastic_eval", "benchmarks.elastic_eval"),
     ("roofline", "benchmarks.roofline"),
+    ("serving_throughput", "benchmarks.serving_throughput"),
 ]
 
 

@@ -1,9 +1,69 @@
-"""Serve one elastic model at mixed per-request budgets (batched engine).
+"""Mixed-budget continuous batching demo: one elastic model, per-request
+budgets routed onto nested GAR-deployed submodels, served through the paged
+KV cache with iteration-level joins — with the drain-batch baseline and
+printed serving metrics for comparison.
 
   PYTHONPATH=src python examples/elastic_serving.py
 """
-from repro.launch.serve import main
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.data import make_source
+from repro.launch.train import build_flexrank_state
+from repro.models import common as cm
+from repro.models import transformer as tfm
+from repro.serving import ElasticEngine, Request
+
+
+def main():
+    cfg = get_config("gpt2-small", smoke=True)
+    rng = np.random.default_rng(0)
+    source = make_source(cfg.vocab_size, 64, 4, seed=0)
+    dense = cm.instantiate(tfm.model_spec(cfg), jax.random.PRNGKey(0))
+    params_fact, table, infos = build_flexrank_state(cfg, dense, source)
+    engine = ElasticEngine(cfg, params_fact, table, infos,
+                           max_batch=4, max_len=64, block_size=8)
+
+    # a bursty mixed stream: budgets 0.4/0.7/1.0, short and long responses
+    budgets = (0.4, 0.7, 1.0)
+    reqs = []
+    for i in range(10):
+        plen = int(rng.integers(4, 12))
+        max_new = 24 if i % 5 == 0 else int(rng.integers(2, 8))
+        reqs.append(Request(prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                            max_new_tokens=max_new, budget=budgets[i % 3]))
+
+    # warm jit traces + GAR row realization so the printed numbers reflect
+    # steady-state serving, not compilation
+    engine.generate(reqs, mode="continuous")
+    engine.generate(reqs, mode="drain")
+
+    results = engine.generate(reqs, mode="continuous")
+    print("== continuous batching (paged KV cache, mid-decode joins) ==")
+    for i, (rq, rs) in enumerate(zip(reqs, results)):
+        ttft = f"{rs.ttft_s*1e3:6.1f} ms" if rs.ttft_s is not None else "   n/a"
+        print(f"req {i}: budget={rq.budget:.1f} -> row {rs.budget_row} "
+              f"({rs.deployed_params:,} params)  ttft={ttft}  "
+              f"tokens={rs.tokens[:10].tolist()}...")
+    m = engine.last_metrics.summary()
+    print(f"\nthroughput : {m['tokens_per_s']:8.1f} tok/s over {m['wall_s']:.2f} s")
+    print(f"ttft       : mean {m['ttft_mean_s']*1e3:.1f} ms, "
+          f"p90 {m['ttft_p90_s']*1e3:.1f} ms")
+    print(f"kv cache   : occupancy mean {m['cache_occupancy_mean']:.2f}, "
+          f"peak {m['cache_occupancy_peak']:.2f}; "
+          f"preemptions {m['preemptions']}")
+    print(f"decode     : {m['decode_steps']} iterations for "
+          f"{m['generated_tokens']} generated tokens")
+
+    import time
+    t0 = time.perf_counter()
+    engine.generate(reqs, mode="drain")
+    drain_s = time.perf_counter() - t0
+    print(f"\ndrain-batch baseline: {m['generated_tokens']/drain_s:8.1f} tok/s "
+          f"(same stream, static batches)")
+    return results
+
 
 if __name__ == "__main__":
-    main(["--arch", "gpt2-small", "--smoke", "--requests", "6",
-          "--budgets", "0.4,0.7,1.0", "--max-new", "8"])
+    main()

@@ -33,7 +33,9 @@ _SEP = "::"
 
 
 def _flatten_with_paths(tree: PyTree) -> Tuple[List[Tuple[str, Any]], Any]:
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists in newer jax; tree_util spelling
+    # works across the versions this repo supports
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
         key = _SEP.join(str(p) for p in path)

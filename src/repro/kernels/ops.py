@@ -17,6 +17,7 @@ from repro.kernels import ref
 from repro.kernels.gar_matmul import gar_matmul
 from repro.kernels.lowrank_matmul import lowrank_matmul
 from repro.kernels.mamba2_ssd import ssd
+from repro.kernels.paged_attention import paged_attention
 from repro.kernels.rwkv6_wkv import wkv6
 
 
@@ -79,6 +80,26 @@ def lowrank_forward(x: jax.Array, v: jax.Array, u: jax.Array,
     else:
         y = ref.lowrank_matmul_ref(xf, v, u, rank)
     return y.astype(x.dtype).reshape(*lead, -1)
+
+
+def paged_attention_forward(q, k_pool, v_pool, block_tables, context_lens, *,
+                            softcap: float = 0.0, window=None,
+                            use_pallas=False):
+    """Paged decode attention. q: (B, Hq, D); pools: (NB, BS, Hkv, D);
+    block_tables: (B, MB); context_lens: (B,). Returns (B, Hq, D).
+
+    ``window`` (sliding-window lookback) is only supported on the oracle
+    path — the serving engine routes local-window layers there.
+    """
+    run, interp = _mode(use_pallas)
+    if run and window is None:
+        return paged_attention(q, k_pool, v_pool,
+                               jnp.asarray(block_tables, jnp.int32),
+                               jnp.asarray(context_lens, jnp.int32),
+                               softcap=softcap, interpret=interp)
+    return ref.paged_attention_ref(q, k_pool, v_pool, block_tables,
+                                   context_lens, softcap=softcap,
+                                   window=window)
 
 
 def wkv6_forward(r, k, v, w, u, *, chunk: int = 64, use_pallas=False):

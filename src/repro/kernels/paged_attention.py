@@ -1,0 +1,112 @@
+"""Pallas paged decode-attention: one query token per sequence attends over a
+block-paged KV cache whose blocks live at non-contiguous pool slots.
+
+Grid (B, MB): the per-sequence block table is a *scalar-prefetch* operand, so
+the BlockSpec index map DMAs exactly the K/V blocks the sequence owns —
+gathering from the pool without ever materializing a contiguous (B, T) cache.
+The MB axis is sequential per sequence; softmax runs in streaming (flash)
+form with running (max, denom, acc) scratch carried across blocks, and blocks
+past ``context_len`` are skipped entirely (their DMA still targets a valid
+pool slot — the shared null block 0 — so the index map stays in bounds).
+
+Head/lane tiling note: shapes here are serving-sized (Hq x D panels); on real
+TPUs Hq*G and D should be padded to the (8, 128) tile by the ops.py wrapper.
+Tests validate via interpret mode against ``ref.paged_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(block_tables_ref, context_lens_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, bs: int, softcap: float, groups: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    mb = pl.num_programs(1)
+    ctx = context_lens_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j * bs < ctx)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)                 # (Hq, D)
+        k = k_ref[0].astype(jnp.float32)                 # (BS, Hkv, D)
+        v = v_ref[0].astype(jnp.float32)
+        hq, d = q.shape
+        hkv = k.shape[1]
+        qg = (q * (1.0 / math.sqrt(d))).reshape(hkv, groups, d)
+        # (Hkv, G, BS) logits via per-kv-head batched contraction
+        logits = jax.lax.dot_general(
+            qg, jnp.moveaxis(k, 0, 1),                   # (Hkv, BS, D)
+            dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        if softcap and softcap > 0.0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        k_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+        logits = jnp.where(k_pos < ctx, logits, NEG_INF)
+        logits = logits.reshape(hq, bs)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]          # (Hq, 1)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new)                      # (Hq, BS)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.reshape(hkv, groups, bs), jnp.moveaxis(v, 0, 1),
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)          # (Hkv, G, D)
+        acc_ref[...] = acc_ref[...] * alpha + pv.reshape(hq, d)
+
+    @pl.when(j == mb - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_tables: jax.Array, context_lens: jax.Array, *,
+                    softcap: float = 0.0, interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, D); pools: (NB, BS, Hkv, D); block_tables: (B, MB);
+    context_lens: (B,). Returns (B, Hq, D)."""
+    b, hq, d = q.shape
+    _, bs, hkv, _ = k_pool.shape
+    mb = block_tables.shape[1]
+    groups = hq // hkv
+    assert groups * hkv == hq, (hq, hkv)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, mb),
+        in_specs=[
+            pl.BlockSpec((1, hq, d), lambda i, j, bt, cl: (i, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, d), lambda i, j, bt, cl: (bt[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, d), lambda i, j, bt, cl: (bt[i, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, d), lambda i, j, bt, cl: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, bs=bs, softcap=softcap, groups=groups),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), context_lens.astype(jnp.int32),
+      q, k_pool, v_pool)

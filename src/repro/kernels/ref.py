@@ -36,6 +36,40 @@ def wkv6_ref(r, k, v, w, u):
     return jnp.moveaxis(ys, 0, 1).astype(r.dtype)
 
 
+def paged_attention_ref(q, k_pool, v_pool, block_tables, context_lens, *,
+                        softcap=0.0, window=None):
+    """Decode attention over a block-paged KV cache (gather + plain softmax).
+
+    q: (B, Hq, D) — one query token per sequence, pre-RoPE'd.
+    k_pool/v_pool: (NB, BS, Hkv, D) — global block pools.
+    block_tables: (B, MB) int32 — per-sequence block ids (0 = null block).
+    context_lens: (B,) int32 — valid tokens per sequence (incl. current).
+
+    Numerics deliberately mirror ``models.attention.chunked_attend`` (q
+    pre-scaled, fp32 logits, -1e30 mask) so the paged engine stays
+    token-identical to the contiguous decode path.
+    """
+    import math
+    b, hq, d = q.shape
+    nb, bs, hkv, _ = k_pool.shape
+    mb = block_tables.shape[1]
+    g = hq // hkv
+    k = jnp.take(k_pool, block_tables, axis=0).reshape(b, mb * bs, hkv, d)
+    v = jnp.take(v_pool, block_tables, axis=0).reshape(b, mb * bs, hkv, d)
+    qg = (q * (1.0 / math.sqrt(d))).reshape(b, hkv, g, d)
+    logits = jnp.einsum("bhgd,bthd->bhgt", qg, k).astype(jnp.float32)
+    if softcap and softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    k_pos = jnp.arange(mb * bs, dtype=jnp.int32)[None, :]        # (1, T)
+    valid = k_pos < context_lens[:, None]
+    if window is not None:
+        valid &= k_pos >= (context_lens[:, None] - window)
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgt,bthd->bhgd", probs, v)
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
 def ssd_ref(x, dt, a, b, c):
     """Sequential SSD recurrence. x: (BH,S,P); dt: (BH,S); a: (BH,); b/c: (BH,S,N)."""
     bh, s, p = x.shape

@@ -182,6 +182,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
         rec["compile_s"] = round(time.time() - t1, 1)
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):    # older jax: one dict per device
+            cost = cost[0] if cost else {}
         rec["bytes_per_device"] = {
             "argument": getattr(mem, "argument_size_in_bytes", None),
             "output": getattr(mem, "output_size_in_bytes", None),

@@ -139,7 +139,13 @@ def _operands(line: str) -> List[str]:
     m = _OPERAND_RE.search(line.split("=", 1)[1] if "=" in line else line)
     if not m:
         return []
-    return [t.strip().lstrip("%") for t in m.group(1).split(",") if t.strip()]
+    inner = m.group(1)
+    # modern XLA prints typed operands ("f32[64,128]{1,0} %name") whose
+    # commas break a naive split — prefer the %-prefixed names
+    names = re.findall(r"%([\w\.\-]+)", inner)
+    if names:
+        return names
+    return [t.strip().lstrip("%") for t in inner.split(",") if t.strip()]
 
 
 def analyze(hlo: str) -> Dict:

@@ -1,8 +1,9 @@
-"""Serving launcher: build (or load) an elastic model, serve a batch of
-requests at mixed budgets through the GAR-deployed submodels.
+"""Serving launcher: build (or load) an elastic model, serve a stream of
+requests at mixed budgets through the GAR-deployed submodels with the
+continuous-batching engine (paged KV cache, iteration-level join).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small --smoke \
-      --requests 6 --budgets 0.4,0.7,1.0
+      --requests 6 --budgets 0.4,0.7,1.0 --engine continuous
 """
 from __future__ import annotations
 
@@ -12,12 +13,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import flexrank as FR
 from repro.data import make_source
 from repro.launch.train import build_flexrank_state
 from repro.models import common as cm
 from repro.models import transformer as tfm
-from repro.serving.engine import ElasticEngine, Request
+from repro.serving import ElasticEngine, Request
 
 
 def main(argv=None):
@@ -29,6 +29,13 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "continuous", "drain"],
+                    help="continuous = paged cache + mid-decode joins; "
+                         "drain = seed-style static batches")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--block-size", type=int, default=16)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -37,7 +44,9 @@ def main(argv=None):
 
     dense = cm.instantiate(tfm.model_spec(cfg), jax.random.PRNGKey(args.seed))
     params_fact, table, infos = build_flexrank_state(cfg, dense, source)
-    engine = ElasticEngine(cfg, params_fact, table, infos)
+    engine = ElasticEngine(cfg, params_fact, table, infos,
+                           max_batch=args.max_batch, max_len=args.max_len,
+                           block_size=args.block_size)
 
     budgets = [float(b) for b in args.budgets.split(",")]
     reqs = []
@@ -45,10 +54,16 @@ def main(argv=None):
         prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len).astype(np.int32)
         reqs.append(Request(prompt=prompt, max_new_tokens=args.max_new,
                             budget=budgets[i % len(budgets)]))
-    results = engine.generate(reqs)
+    results = engine.generate(reqs, mode=args.engine)
     for i, (rq, rs) in enumerate(zip(reqs, results)):
         print(f"req {i}: budget={rq.budget:.2f} -> row {rs.budget_row} "
               f"({rs.deployed_params:,} params) tokens={rs.tokens[:12].tolist()}...")
+    if engine.last_metrics is not None:
+        s = engine.last_metrics.summary()
+        print(f"# serving: {s['tokens_per_s']:.1f} tok/s, "
+              f"ttft mean {s['ttft_mean_s']*1e3:.1f} ms, "
+              f"cache occupancy peak {s['cache_occupancy_peak']:.2f}, "
+              f"preemptions {s['preemptions']}")
     return results
 
 

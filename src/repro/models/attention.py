@@ -113,6 +113,26 @@ def _split_heads(x: Array, n: int) -> Array:
     return x.reshape(b, s, n, -1)
 
 
+def project_qkv(p: Dict, x: Array, cfg: ModelConfig, *,
+                ranks: Dict[str, Array], positions: Array,
+                rope: bool = True) -> Tuple[Array, Array, Array]:
+    """Self-attention q/k/v projection + head norms + RoPE.
+
+    Shared by the contiguous (``attn_apply``) and paged
+    (``paged_attn_apply``) decode paths — they must stay numerically
+    identical for the serving engine's token-identity guarantee.
+    """
+    q = _split_heads(linear(p["q"], x, rank=ranks.get("q"), tap="q"), cfg.num_heads)
+    q = cm.rms_norm(q, p["q_norm"], eps=cfg.norm_eps)
+    k = _split_heads(linear(p["k"], x, rank=ranks.get("k"), tap="k"), cfg.num_kv_heads)
+    v = _split_heads(linear(p["v"], x, rank=ranks.get("v"), tap="v"), cfg.num_kv_heads)
+    k = cm.rms_norm(k, p["k_norm"], eps=cfg.norm_eps)
+    if rope:
+        q = cm.rope(q, positions, base=cfg.rope_base)
+        k = cm.rope(k, positions, base=cfg.rope_base)
+    return q, k, v
+
+
 def attn_apply(
     p: Dict,
     x: Array,
@@ -137,22 +157,21 @@ def attn_apply(
     """
     r = ranks or {}
     hd = cfg.resolved_head_dim
-    src = kv_source if kv_source is not None else x
 
-    q = _split_heads(linear(p["q"], x, rank=r.get("q"), tap="q"), cfg.num_heads)
-    q = cm.rms_norm(q, p["q_norm"], eps=cfg.norm_eps)
-    if static_kv is not None:
-        k, v = static_kv
+    if kv_source is None and static_kv is None:
+        q, k, v = project_qkv(p, x, cfg, ranks=r, positions=positions,
+                              rope=use_rope)
     else:
-        k = _split_heads(linear(p["k"], src, rank=r.get("k"), tap="k"), cfg.num_kv_heads)
-        v = _split_heads(linear(p["v"], src, rank=r.get("v"), tap="v"), cfg.num_kv_heads)
-        k = cm.rms_norm(k, p["k_norm"], eps=cfg.norm_eps)
-
-    if use_rope and kv_source is None:
-        q = cm.rope(q, positions, base=cfg.rope_base)
-        if cache is None:
-            k = cm.rope(k, positions, base=cfg.rope_base)
+        q = _split_heads(linear(p["q"], x, rank=r.get("q"), tap="q"), cfg.num_heads)
+        q = cm.rms_norm(q, p["q_norm"], eps=cfg.norm_eps)
+        if static_kv is not None:
+            k, v = static_kv
         else:
+            k = _split_heads(linear(p["k"], kv_source, rank=r.get("k"), tap="k"), cfg.num_kv_heads)
+            v = _split_heads(linear(p["v"], kv_source, rank=r.get("v"), tap="v"), cfg.num_kv_heads)
+            k = cm.rms_norm(k, p["k_norm"], eps=cfg.norm_eps)
+        if use_rope and kv_source is None:
+            q = cm.rope(q, positions, base=cfg.rope_base)
             k = cm.rope(k, positions, base=cfg.rope_base)
 
     new_cache = None
@@ -168,7 +187,8 @@ def attn_apply(
                              k_positions=k_positions, window=window,
                              softcap=cfg.attn_logit_softcap, causal=causal)
     else:
-        k_positions = positions if kv_source is None else jnp.arange(src.shape[1])
+        k_positions = (positions if kv_source is None
+                       else jnp.arange(kv_source.shape[1]))
         out = chunked_attend(q, k, v, q_positions=positions,
                              k_positions=k_positions, window=window,
                              softcap=cfg.attn_logit_softcap,
@@ -178,6 +198,48 @@ def attn_apply(
     out = out.reshape(b, s, cfg.num_heads * hd)
     y = linear(p["o"], out, rank=r.get("o"), tap="o")
     return y, new_cache
+
+
+def paged_attn_apply(
+    p: Dict,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    positions: Array,
+    block_tables: Array,
+    k_pool: Array,
+    v_pool: Array,
+    window: Optional[Array | int] = None,
+    ranks: Optional[Dict[str, Array]] = None,
+    use_pallas=False,
+) -> Tuple[Array, Array, Array]:
+    """Decode self-attention over a block-paged KV cache.
+
+    x: (B, 1, d) — one token per sequence, each at its *own* position
+    (continuous batching: sequences in the batch are at different lengths).
+    ``positions``: (B,) int32 — 0-based index of the current token; its K/V is
+    scattered into (block_tables[b, pos // BS], pos % BS) before attending
+    over the ``pos + 1`` valid keys. Returns (y, k_pool, v_pool).
+    """
+    r = ranks or {}
+    hd = cfg.resolved_head_dim
+    bsz = x.shape[0]
+    bs = k_pool.shape[1]
+
+    q, k, v = project_qkv(p, x, cfg, ranks=r, positions=positions[:, None])
+
+    blk = jnp.take_along_axis(block_tables, (positions // bs)[:, None], axis=1)[:, 0]
+    off = positions % bs
+    k_pool = k_pool.at[blk, off].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[blk, off].set(v[:, 0].astype(v_pool.dtype))
+
+    from repro.kernels import ops
+    out = ops.paged_attention_forward(
+        q[:, 0], k_pool, v_pool, block_tables, positions + 1,
+        softcap=cfg.attn_logit_softcap, window=window, use_pallas=use_pallas)
+    out = out.reshape(bsz, 1, cfg.num_heads * hd)
+    y = linear(p["o"], out, rank=r.get("o"), tap="o")
+    return y, k_pool, v_pool
 
 
 def ffn_apply(p: Dict, x: Array, *, ranks: Optional[Dict[str, Array]] = None) -> Array:

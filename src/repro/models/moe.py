@@ -163,7 +163,9 @@ def _moe_inner(x_col, router_w, exp_params, rank_vals, *, cfg, axis="model"):
     """Per-device body. x_col: (Tc, d) — this device's token slice."""
     m = cfg.moe
     tc, d = x_col.shape
-    n_dev = jax.lax.axis_size(axis)
+    # jax.lax.axis_size is too new for the floor jax version; psum(1) is the
+    # portable spelling of the axis size
+    n_dev = jax.lax.psum(1, axis)
     e_loc = m.num_experts // n_dev
 
     logits = x_col.astype(jnp.float32) @ router_w                # (Tc, E)

@@ -594,9 +594,14 @@ def decode_step(
     ranks: Optional[Dict] = None,
     kv_source: Optional[Array] = None,
 ) -> Tuple[Array, Dict]:
-    """One decode step. tokens: (B, 1). Returns (logits (B, 1, V), new state)."""
+    """One decode step. tokens: (B, S). Returns (logits (B, S, V), new state).
+
+    S = 1 is the classic decode step; S > 1 runs a *single-pass batched
+    prefill* through the same cache (all projections + attention over the
+    whole prompt in one forward) — see ``prefill``.
+    """
     pos = state["pos"]
-    positions = pos[None] + jnp.zeros((1,), jnp.int32)
+    positions = pos + jnp.arange(tokens.shape[1], dtype=jnp.int32)
     x = embed_tokens(params, tokens, cfg)
 
     cross_cached = has_cross_kv(state)
@@ -604,7 +609,7 @@ def decode_step(
             and kv_source.shape[-1] == cfg.frontend_dim):
         kv_source = linear(params["frontend_proj"], kv_source)
 
-    new_caches = {"pos": pos + 1, "segments": []}
+    new_caches = {"pos": pos + tokens.shape[1], "segments": []}
     offset = 0
     for i, seg in enumerate(cfg.segments):
         if seg.kind == "encoder":
@@ -618,5 +623,97 @@ def decode_step(
                                   kv_source=kv_source, layer_offset=offset,
                                   shared_attn_ranks=rget_tree(ranks, "shared_attn"))
         new_caches["segments"].append(new_c)
+        offset += seg.count
+    return lm_logits(params, x, cfg), new_caches
+
+
+def prefill(
+    params: Dict,
+    cfg: ModelConfig,
+    state: Dict,
+    tokens: Array,
+    *,
+    ranks: Optional[Dict] = None,
+    kv_source: Optional[Array] = None,
+) -> Tuple[Array, Dict]:
+    """Single-pass batched prefill: the whole prompt in ONE forward call that
+    writes the decode cache (replaces the seed's per-token teacher-forced
+    loop — O(1) dispatches instead of O(S)).
+
+    tokens: (B, S). Returns (logits (B, S, V), state); ``logits[:, -1]``
+    seeds the first generated token. For recurrent segments (mamba/rwkv) the
+    carried-state path supports S up to the family's chunk size.
+    """
+    return decode_step(params, cfg, state, tokens, ranks=ranks,
+                       kv_source=kv_source)
+
+
+# ---------------------------------------------------------------------------
+# paged decode (continuous-batching serving path)
+# ---------------------------------------------------------------------------
+
+def paged_compatible(cfg: ModelConfig) -> bool:
+    """Paged decode covers pure self-attention stacks (incl. MoE FFNs)."""
+    return (cfg.mla is None and cfg.frontend_dim == 0
+            and all(s.kind in ("attn", "attn_dense") for s in cfg.segments))
+
+
+def paged_decode_step(
+    params: Dict,
+    cfg: ModelConfig,
+    caches: Dict,
+    tokens: Array,
+    *,
+    ranks: Optional[Dict] = None,
+    use_pallas=False,
+) -> Tuple[Array, Dict]:
+    """One continuous-batching decode step over a block-paged KV cache.
+
+    tokens: (B, 1). ``caches``: {'positions': (B,) current 0-based token
+    index per sequence, 'block_tables': (B, MB), 'segments': [{'k': (count,
+    NB, BS, Hkv, D), 'v': ...} per segment]}. Unlike ``decode_step`` there is
+    no shared scalar position — every sequence sits at its own length, which
+    is what lets new requests join mid-decode. Returns (logits (B, 1, V),
+    new caches with K/V scattered into each sequence's blocks).
+    """
+    assert paged_compatible(cfg), cfg.name
+    positions = caches["positions"]
+    block_tables = caches["block_tables"]
+    x = embed_tokens(params, tokens, cfg)
+    # all-global configs hit the Pallas kernel; local-window layers carry a
+    # traced per-layer window and route to the oracle path inside ops.py
+    windowed = bool(cfg.local_window and cfg.global_every)
+
+    new_caches = {"positions": positions + 1, "block_tables": block_tables,
+                  "segments": []}
+    offset = 0
+    for i, seg in enumerate(cfg.segments):
+        seg_ranks = _seg_ranks(ranks, i)
+        pool = caches["segments"][i]
+        moe = cfg.moe is not None and seg.kind == "attn"
+        windows = window_schedule(cfg, seg.count, offset)
+
+        def body(carry, xs):
+            xx = carry
+            p_l, win_l, kp_l, vp_l, ranks_l = xs
+            h = cm.rms_norm(xx, p_l["ln_attn"], eps=cfg.norm_eps)
+            y, kp_l, vp_l = attn.paged_attn_apply(
+                p_l["attn"], h, cfg, positions=positions,
+                block_tables=block_tables, k_pool=kp_l, v_pool=vp_l,
+                window=win_l if windowed else None,
+                ranks=rget_tree(ranks_l, "attn"),
+                use_pallas=use_pallas)
+            xx = xx + y
+            h = cm.rms_norm(xx, p_l["ln_mlp"], eps=cfg.norm_eps)
+            if moe:
+                y, _ = moe_mod.moe_apply(p_l["mlp"], h, cfg,
+                                         ranks=rget_tree(ranks_l, "mlp"))
+            else:
+                y = attn.ffn_apply(p_l["mlp"], h, ranks=rget_tree(ranks_l, "mlp"))
+            return xx + y, {"k": kp_l, "v": vp_l}
+
+        x, new_pool = _scan(body, x, (params["segments"][i], windows,
+                                      pool["k"], pool["v"], seg_ranks))
+        new_caches["segments"].append(new_pool)
         offset += seg.count
     return lm_logits(params, x, cfg), new_caches

@@ -1,0 +1,13 @@
+"""Elastic serving subsystem: continuous batching over nested FlexRank
+submodels with a block-paged KV cache and budget-aware scheduling."""
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.engine import CacheOOM, ElasticEngine, Request, Result
+from repro.serving.kv_cache import BlockAllocator, PagedKVCache
+from repro.serving.metrics import ServingMetrics
+from repro.serving.scheduler import BudgetRouter, Scheduler, Sequence
+
+__all__ = [
+    "BlockAllocator", "BudgetRouter", "CacheOOM", "ContinuousBatcher",
+    "ElasticEngine", "PagedKVCache", "Request", "Result", "Scheduler",
+    "Sequence", "ServingMetrics",
+]

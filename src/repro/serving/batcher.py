@@ -1,0 +1,79 @@
+"""Iteration-level batching: fixed decode slots that sequences join and
+leave *mid-decode*, instead of draining the whole batch before admitting new
+work (Orca-style continuous batching).
+
+The batcher owns only slot state — which sequence sits where and what token
+it feeds next. Block accounting lives in ``kv_cache``; admission policy in
+``scheduler``; the engine composes the three.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.scheduler import Sequence
+
+
+class ContinuousBatcher:
+    def __init__(self, max_batch: int):
+        self.max_batch = max_batch
+        self.slots: List[Optional[Sequence]] = [None] * max_batch
+        self._next_token = np.zeros(max_batch, np.int32)
+
+    # ------------------------------------------------------------- slots
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def active_sequences(self) -> List[Sequence]:
+        return [s for s in self.slots if s is not None]
+
+    @property
+    def num_active(self) -> int:
+        return len(self.active_slots())
+
+    def slot_of(self, seq: Sequence) -> int:
+        for i, s in enumerate(self.slots):
+            if s is seq:
+                return i
+        raise KeyError(seq.req_id)
+
+    # -------------------------------------------------------- join/leave
+
+    def join(self, slot: int, seq: Sequence, first_token: int) -> None:
+        """Seat a prefilled sequence; it decodes from ``first_token`` on the
+        next iteration, alongside whatever is already mid-flight."""
+        assert self.slots[slot] is None, slot
+        self.slots[slot] = seq
+        self._next_token[slot] = first_token
+
+    def leave(self, slot: int) -> Sequence:
+        seq = self.slots[slot]
+        assert seq is not None, slot
+        self.slots[slot] = None
+        self._next_token[slot] = 0
+        return seq
+
+    # ------------------------------------------------------- device step
+
+    def feed_tokens(self) -> np.ndarray:
+        """(B, 1) int32 next-token batch (idle slots feed token 0)."""
+        return self._next_token[:, None].copy()
+
+    def advance(self, sampled: np.ndarray) -> List[int]:
+        """Record one decode iteration's sampled tokens (B,). Returns slots
+        whose sequence just finished."""
+        finished = []
+        for i, seq in enumerate(self.slots):
+            if seq is None:
+                continue
+            tok = int(sampled[i])
+            seq.generated.append(tok)
+            self._next_token[i] = tok
+            if seq.done:
+                finished.append(i)
+        return finished

@@ -1,14 +1,24 @@
-"""Batched elastic serving engine.
+"""Elastic serving engine: continuous batching over nested FlexRank submodels.
 
-Holds one set of FlexRank shared weights plus the nested profile table; each
-request names a budget, the engine realizes the submodel via GAR (cached per
-budget — "train once, deploy everywhere") and serves prefill + decode with a
-static-shape batch slot model (requests are padded into fixed (B, S) slots,
-the standard TPU serving discipline).
+Holds one set of shared FlexRank weights plus the nested profile table; each
+request names a budget, the scheduler routes it to a GAR-deployed row
+("train once, deploy everywhere") and the engine serves it through:
+
+  * a single-pass batched prefill (one forward over the whole prompt writing
+    the KV cache — the seed teacher-forced one token at a time),
+  * a block-paged KV cache with a free-list allocator (``kv_cache``),
+  * iteration-level continuous batching (``batcher``): finished sequences
+    free their slot mid-flight and waiting requests join the running batch
+    without draining it,
+  * budget-aware admission + youngest-first preemption on cache pressure
+    (``scheduler``), with recompute semantics (greedy decode makes the
+    regenerated tokens identical).
+
+Families outside the paged path (mamba/rwkv/zamba/MLA/enc-dec) fall back to
+the drain-batch engine, itself upgraded to single-pass prefill.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, List, Optional
 
 import jax
@@ -17,43 +27,53 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import flexrank as FR
-from repro.models import common as cm
 from repro.models import transformer as tfm
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.kv_cache import CacheOOM, PagedKVCache
+from repro.serving.metrics import ServingMetrics
+from repro.serving.scheduler import (BudgetRouter, Request, Result, Scheduler,
+                                     Sequence)
 
-
-@dataclasses.dataclass
-class Request:
-    prompt: np.ndarray          # (S_prompt,) int32
-    max_new_tokens: int = 16
-    budget: float = 1.0         # relative size in (0, 1]
-
-
-@dataclasses.dataclass
-class Result:
-    tokens: np.ndarray
-    budget_row: int
-    deployed_params: int
+__all__ = ["ElasticEngine", "Request", "Result", "CacheOOM"]
 
 
 class ElasticEngine:
     def __init__(self, cfg: ModelConfig, params_fact, table, infos, *,
-                 max_batch: int = 8, max_len: int = 256):
+                 max_batch: int = 8, max_len: int = 256,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 use_pallas=False):
         self.cfg = cfg
         self.params_fact = params_fact
         self.table = table
         self.infos = infos
         self.max_batch = max_batch
         self.max_len = max_len
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.use_pallas = use_pallas
         self._deployed: Dict[int, object] = {}
+        # deployed-param cost per budget row, computed ONCE (the seed redid
+        # this O(rows) scan inside every routing call)
+        self._cost_table = np.asarray(
+            [FR.deployed_param_count(cfg, infos, table, k)
+             for k in range(table.table.shape[0])], np.int64)
+        self.router = BudgetRouter(self._cost_table)
+        self.last_metrics: Optional[ServingMetrics] = None
         self._decode_jit = jax.jit(
             lambda p, st, tok: tfm.decode_step(p, self.cfg, st, tok))
+        self._prefill_jit = jax.jit(
+            lambda p, st, tok: tfm.prefill(p, self.cfg, st, tok))
+        # caches donated: K/V pools update in place instead of copying the
+        # whole pool every step
+        self._paged_jit = jax.jit(
+            lambda p, caches, tok: tfm.paged_decode_step(
+                p, self.cfg, caches, tok, use_pallas=self.use_pallas),
+            donate_argnums=(1,))
+
+    # ------------------------------------------------------------ routing
 
     def _budget_row(self, budget: float) -> int:
-        costs = [FR.deployed_param_count(self.cfg, self.infos, self.table, k)
-                 for k in range(self.table.table.shape[0])]
-        full = costs[-1]
-        feasible = [k for k, c in enumerate(costs) if c <= budget * full + 1]
-        return feasible[-1] if feasible else 0
+        return self.router.route(budget)
 
     def _realize(self, row: int):
         """GAR-deploy the budget row (cached) — paper Algorithm 1 'deploy'."""
@@ -62,9 +82,161 @@ class ElasticEngine:
                 self.params_fact, self.cfg, self.infos, self.table, row)
         return self._deployed[row]
 
-    def generate(self, requests: List[Request]) -> List[Result]:
+    # ----------------------------------------------------------- generate
+
+    def generate(self, requests: List[Request], *, mode: str = "auto",
+                 metrics: Optional[ServingMetrics] = None) -> List[Result]:
+        """Serve ``requests`` to completion. ``mode``: 'continuous' (paged
+        cache + iteration-level batching), 'drain' (seed-style static
+        batches), or 'auto' (continuous whenever the family supports it)."""
+        if mode not in ("auto", "continuous", "drain"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if mode == "auto":
+            mode = "continuous" if tfm.paged_compatible(self.cfg) else "drain"
+        if mode == "drain":
+            return self.generate_drain(requests)
+        if not tfm.paged_compatible(self.cfg):
+            raise ValueError(
+                f"{self.cfg.name}: paged continuous batching covers "
+                "attn/attn_dense stacks only (ROADMAP open item); "
+                "use mode='drain' or 'auto'")
+        return self._generate_continuous(requests, metrics=metrics)
+
+    # ----------------------------------------- continuous batching path
+
+    def _generate_continuous(self, requests: List[Request], *,
+                             metrics: Optional[ServingMetrics] = None
+                             ) -> List[Result]:
+        metrics = metrics or ServingMetrics()
+        self.last_metrics = metrics
+        sched = Scheduler(self.router)
+        submitted = []
+        for r in requests:
+            if len(r.prompt) == 0:
+                raise ValueError("empty prompt")
+            seq = sched.submit(r)
+            metrics.on_submit(seq.req_id)
+            submitted.append(seq)
+        results: Dict[int, Result] = {}
+        while sched.has_waiting():
+            row = sched.next_row()
+            self._serve_row(row, sched, metrics, results)
+        return [results[s.req_id] for s in submitted]
+
+    def _finish(self, seq: Sequence, metrics, results) -> None:
+        metrics.on_finish(seq.req_id)
+        tokens = np.concatenate([np.asarray(seq.request.prompt, np.int32),
+                                 np.asarray(seq.generated, np.int32)])
+        results[seq.req_id] = Result(
+            tokens=tokens, budget_row=seq.row,
+            deployed_params=self.router.deployed_params(seq.row),
+            ttft_s=metrics.traces[seq.req_id].ttft)
+
+    def _serve_row(self, row: int, sched: Scheduler, metrics: ServingMetrics,
+                   results: Dict[int, Result]) -> None:
+        """Run one budget row's continuous-batching loop until its queue and
+        batch drain. Requests submitted for this row join mid-decode."""
+        params = self._realize(row)
+        cache = PagedKVCache(self.cfg, max_batch=self.max_batch,
+                             max_len=self.max_len, block_size=self.block_size,
+                             num_blocks=self.num_blocks)
+        batcher = ContinuousBatcher(self.max_batch)
+
+        while True:
+            self._admit(params, row, sched, cache, batcher, metrics, results)
+            if batcher.num_active == 0:
+                if sched.has_waiting(row):
+                    raise CacheOOM(
+                        "cache cannot fit a single waiting request "
+                        f"(free blocks: {cache.allocator.free_count})")
+                break
+            self._reserve_or_preempt(sched, cache, batcher, metrics)
+            if batcher.num_active == 0:
+                continue                       # everyone was preempted
+
+            # truncate the table view to the live maximum so attention cost
+            # tracks actual context lengths, not max_len
+            logits, new_caches = self._paged_jit(
+                params, cache.model_caches(cache.active_max_blocks()),
+                jnp.asarray(batcher.feed_tokens()))
+            cache.update_pools(new_caches)
+            sampled = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+            stepped = batcher.active_sequences()
+            for seq in stepped:
+                metrics.on_token(seq.req_id)
+            metrics.on_decode_step(len(stepped), cache.occupancy())
+            for slot in batcher.advance(sampled):
+                seq = batcher.leave(slot)
+                cache.free_slot(slot)
+                self._finish(seq, metrics, results)
+
+    def _admit(self, params, row, sched, cache, batcher, metrics, results):
+        """Iteration-level join: prefill waiting requests into free slots."""
+        for slot in batcher.free_slots():
+            if not sched.has_waiting(row):
+                break
+            nxt = sched.queues[row][0]
+            if not cache.can_allocate(nxt.prompt_len):
+                break                          # wait for blocks to free up
+            seq = sched.pop(row)
+            if seq.request.max_new_tokens <= 0:   # prompt-only, matches drain
+                self._finish(seq, metrics, results)
+                continue
+            cache.allocate_slot(slot, seq.prompt_len)
+            first = self._prefill_slot(params, cache, slot, seq)
+            seq.generated.append(first)
+            metrics.on_first_token(seq.req_id, seq.prompt_len)
+            if seq.done:                       # max_new_tokens == 1
+                cache.free_slot(slot)
+                self._finish(seq, metrics, results)
+            else:
+                batcher.join(slot, seq, first)
+
+    def _prefill_slot(self, params, cache: PagedKVCache, slot: int,
+                      seq: Sequence) -> int:
+        """Single-pass prefill of one prompt, scattered into the slot's
+        blocks. Prompt is padded to the block boundary (padded positions are
+        never attended — context_len masks them) so prefill shapes bucket by
+        block count, keeping jit retraces O(max_blocks_per_seq)."""
+        plen = seq.prompt_len
+        s_pad = len(cache.slots[slot].blocks) * cache.block_size
+        state = tfm.init_decode_state(self.cfg, 1, s_pad, dtype=jnp.float32)
+        padded = np.zeros((1, s_pad), np.int32)
+        padded[0, :plen] = np.asarray(seq.request.prompt, np.int32)
+        logits, state = self._prefill_jit(params, state, jnp.asarray(padded))
+        cache.write_prefill(slot, state["segments"])
+        return int(np.asarray(jnp.argmax(logits[0, plen - 1])))
+
+    def _reserve_or_preempt(self, sched, cache, batcher, metrics):
+        """Reserve next-token room for every active slot; under cache
+        pressure evict the youngest sequence (freed + re-queued for
+        recompute) until the rest fit."""
+        for slot in batcher.active_slots():
+            while (cache.token_append_needs_block(slot)
+                   and cache.allocator.free_count == 0):
+                active = batcher.active_sequences()
+                victim = Scheduler.pick_victim(active)
+                vslot = batcher.slot_of(victim)
+                if vslot == slot and len(active) == 1:
+                    raise CacheOOM(
+                        f"sequence {victim.req_id} alone exceeds the pool")
+                batcher.leave(vslot)
+                cache.free_slot(vslot)
+                sched.requeue_front(victim)
+                metrics.on_preempt(victim.req_id)
+                if vslot == slot:
+                    break                      # the appender itself was evicted
+            if batcher.slots[slot] is not None:
+                cache.append_token(slot)
+
+    # ------------------------------------------------ drain-batch (legacy)
+
+    def generate_drain(self, requests: List[Request]) -> List[Result]:
+        """Seed-compatible static batching: group by budget row, pad into
+        fixed slots, drain each batch fully before the next one starts.
+        Kept as the benchmark baseline; prefill is single-pass now instead
+        of the seed's per-token teacher-forced loop."""
         out: List[Optional[Result]] = [None] * len(requests)
-        # group by realized budget row -> one batch per submodel
         rows: Dict[int, List[int]] = {}
         for i, r in enumerate(requests):
             rows.setdefault(self._budget_row(r.budget), []).append(i)
@@ -80,28 +252,25 @@ class ElasticEngine:
         for chunk_start in range(0, len(reqs), self.max_batch):
             chunk = reqs[chunk_start: chunk_start + self.max_batch]
             b = len(chunk)
-            state = tfm.init_decode_state(self.cfg, b, self.max_len, dtype=jnp.float32)
+            state = tfm.init_decode_state(self.cfg, b, self.max_len,
+                                          dtype=jnp.float32)
             toks = [list(map(int, r.prompt)) for r in chunk]
             max_new = max(r.max_new_tokens for r in chunk)
-            # teacher-forced prefill through the decode path (single engine path)
             plen = max(len(t) for t in toks)
             padded = np.zeros((b, plen), np.int32)
             for i, t in enumerate(toks):
                 padded[i, : len(t)] = t
-            cur = jnp.asarray(padded[:, :1])
-            outs = [padded[:, :1]]
-            for pos in range(plen + max_new - 1):
-                logits, state = self._decode_jit(params, state, cur)
-                nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)[:, None]
-                if pos + 1 < plen:
-                    cur = jnp.asarray(padded[:, pos + 1: pos + 2])  # teacher-forced
-                    outs.append(np.asarray(cur))
-                else:
-                    cur = jnp.asarray(nxt)
-                    outs.append(nxt)
+            logits, state = self._prefill_jit(params, state, jnp.asarray(padded))
+            cur = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)[:, None]
+            outs = [padded, cur]
+            for _ in range(max_new - 1):
+                logits, state = self._decode_jit(params, state, jnp.asarray(cur))
+                cur = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)[:, None]
+                outs.append(cur)
             seq = np.concatenate(outs, axis=1)
-            dp = FR.deployed_param_count(self.cfg, self.infos, self.table, row)
+            dp = self.router.deployed_params(row)
             for i, r in enumerate(chunk):
-                results.append(Result(tokens=seq[i, : len(toks[i]) + r.max_new_tokens],
-                                      budget_row=row, deployed_params=dp))
+                results.append(Result(
+                    tokens=seq[i, : len(toks[i]) + r.max_new_tokens],
+                    budget_row=row, deployed_params=dp))
         return results

@@ -1,0 +1,209 @@
+"""Block-paged KV cache: a global pool of fixed-size blocks per attention
+layer, a host-side free-list allocator, and per-slot block tables.
+
+Memory layout (vLLM-style, adapted to scanned segments): every attention
+segment owns K/V pools shaped (count, num_blocks, block_size, Hkv, hd) —
+``count`` stacked layers share one *block id space*, so a sequence holds one
+block table that addresses the same slots in every layer's pool. Block 0 is
+the reserved null block: it backs unused table entries and idle batch slots,
+so device-side gathers never index out of bounds.
+
+The allocator is deliberately host-side numpy (free list + LIFO reuse):
+allocation decisions happen between device steps, at batch-slot granularity,
+and never trace into jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+NULL_BLOCK = 0
+
+
+class CacheOOM(Exception):
+    """Raised when the block pool cannot cover an allocation request."""
+
+
+class BlockAllocator:
+    """LIFO free list over ``num_blocks`` blocks; block 0 is never handed out."""
+
+    def __init__(self, num_blocks: int):
+        assert num_blocks >= 2, num_blocks
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._held: set = set()
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise CacheOOM(f"need {n} blocks, {len(self._free)} free")
+        out = [self._free.pop() for _ in range(n)]
+        self._held.update(out)
+        return out
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            assert b in self._held, f"double free of block {b}"
+            self._held.discard(b)
+            self._free.append(b)
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Host bookkeeping for one batch slot."""
+    blocks: List[int]
+    num_tokens: int = 0          # tokens written (prompt + generated)
+
+
+class PagedKVCache:
+    """Device block pools + host allocator + per-slot block tables.
+
+    ``max_batch`` fixed decode slots; each slot's table covers up to
+    ``max_blocks_per_seq`` blocks. ``num_blocks`` counts usable blocks
+    (the null block is allocated on top).
+    """
+
+    def __init__(self, cfg: ModelConfig, *, max_batch: int, max_len: int,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 dtype=jnp.float32):
+        assert block_size >= 1
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.block_size = block_size
+        self.max_blocks_per_seq = math.ceil(max_len / block_size)
+        if num_blocks is None:
+            num_blocks = max_batch * self.max_blocks_per_seq
+        self.allocator = BlockAllocator(num_blocks + 1)   # +1: null block
+        hd = cfg.resolved_head_dim
+        self.pools = []
+        for seg in cfg.segments:
+            shape = (seg.count, num_blocks + 1, block_size,
+                     cfg.num_kv_heads, hd)
+            self.pools.append({"k": jnp.zeros(shape, dtype),
+                               "v": jnp.zeros(shape, dtype)})
+        self.slots: List[Optional[SlotState]] = [None] * max_batch
+        self._tables = np.full((max_batch, self.max_blocks_per_seq),
+                               NULL_BLOCK, np.int32)
+
+    # ------------------------------------------------------------- alloc
+
+    def blocks_needed(self, num_tokens: int) -> int:
+        return math.ceil(num_tokens / self.block_size)
+
+    def can_allocate(self, num_tokens: int) -> bool:
+        return self.blocks_needed(num_tokens) <= self.allocator.free_count
+
+    def allocate_slot(self, slot: int, num_tokens: int) -> SlotState:
+        """Claim a slot and the blocks covering ``num_tokens`` (the prompt)."""
+        assert self.slots[slot] is None, f"slot {slot} busy"
+        if num_tokens > self.max_len:
+            raise CacheOOM(f"sequence of {num_tokens} tokens exceeds "
+                           f"max_len {self.max_len}")
+        blocks = self.allocator.alloc(self.blocks_needed(num_tokens))
+        st = SlotState(blocks=blocks, num_tokens=num_tokens)
+        self.slots[slot] = st
+        self._tables[slot, :] = NULL_BLOCK
+        self._tables[slot, : len(blocks)] = blocks
+        return st
+
+    def append_token(self, slot: int) -> None:
+        """Reserve room for one more token; grabs a fresh block on boundary."""
+        st = self.slots[slot]
+        assert st is not None, slot
+        if st.num_tokens + 1 > self.max_len:
+            raise CacheOOM(f"slot {slot} exceeds max_len {self.max_len}")
+        if self.blocks_needed(st.num_tokens + 1) > len(st.blocks):
+            (b,) = self.allocator.alloc(1)
+            st.blocks.append(b)
+            self._tables[slot, len(st.blocks) - 1] = b
+        st.num_tokens += 1
+
+    def token_append_needs_block(self, slot: int) -> bool:
+        st = self.slots[slot]
+        return st is not None and st.num_tokens % self.block_size == 0
+
+    def free_slot(self, slot: int) -> None:
+        st = self.slots[slot]
+        assert st is not None, slot
+        self.allocator.free(st.blocks)
+        self.slots[slot] = None
+        self._tables[slot, :] = NULL_BLOCK
+
+    # ------------------------------------------------------------ device
+
+    def device_tables(self, max_blocks: Optional[int] = None) -> jax.Array:
+        """Block tables, optionally truncated to ``max_blocks`` columns —
+        attention cost then scales with the longest *live* context instead
+        of ``max_len`` (the whole point of paging)."""
+        t = self._tables if max_blocks is None else self._tables[:, :max_blocks]
+        return jnp.asarray(t)
+
+    def device_positions(self) -> jax.Array:
+        """(B,) 0-based index of the token being decoded this step per slot.
+
+        Call after ``append_token``: the current token is the last reserved
+        one, i.e. ``num_tokens - 1``. Idle slots sit at position 0 — they
+        read/write only the null block and their output is discarded (and
+        stays finite, so no NaNs enter the batch).
+        """
+        pos = [0 if s is None else max(0, s.num_tokens - 1)
+               for s in self.slots]
+        return jnp.asarray(np.asarray(pos, np.int32))
+
+    def model_caches(self, max_blocks: Optional[int] = None) -> Dict:
+        """Cache pytree consumed by ``transformer.paged_decode_step``."""
+        return {"positions": self.device_positions(),
+                "block_tables": self.device_tables(max_blocks),
+                "segments": self.pools}
+
+    def active_max_blocks(self) -> int:
+        """Smallest power-of-two table width covering every live sequence
+        (so jit sees O(log max_blocks_per_seq) distinct shapes)."""
+        used = max((len(s.blocks) for s in self.slots if s is not None),
+                   default=1)
+        mb = 1
+        while mb < used:
+            mb *= 2
+        return min(mb, self.max_blocks_per_seq)
+
+    def update_pools(self, new_caches: Dict) -> None:
+        self.pools = [dict(p) for p in new_caches["segments"]]
+
+    def write_prefill(self, slot: int, seg_caches: List[Dict]) -> None:
+        """Scatter a contiguous prefill cache into the slot's blocks.
+
+        ``seg_caches``: per segment {'k': (count, 1, S_pad, Hkv, hd), ...}
+        from a batch-1 ``transformer.prefill``; S_pad must be a multiple of
+        ``block_size`` covering exactly this slot's blocks.
+        """
+        st = self.slots[slot]
+        assert st is not None, slot
+        idx = jnp.asarray(np.asarray(st.blocks, np.int32))
+        for si, c in enumerate(seg_caches):
+            if c is None:
+                continue
+            for name in ("k", "v"):
+                src = c[name][:, 0]                       # (count, S_pad, H, D)
+                count, s_pad = src.shape[0], src.shape[1]
+                nb = s_pad // self.block_size
+                assert nb == len(st.blocks), (nb, len(st.blocks))
+                src = src.reshape(count, nb, self.block_size, *src.shape[2:])
+                self.pools[si][name] = (
+                    self.pools[si][name].at[:, idx].set(src))
+
+    # ----------------------------------------------------------- metrics
+
+    def occupancy(self) -> float:
+        used = self.allocator.num_blocks - 1 - self.allocator.free_count
+        return used / (self.allocator.num_blocks - 1)

@@ -1,0 +1,102 @@
+"""Serving metrics: tokens/s, time-to-first-token, KV-cache occupancy.
+
+Collected host-side by the engine loop (one sample per scheduler iteration)
+— cheap enough to stay on for production traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+
+def _pct(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    i = min(len(s) - 1, int(q * (len(s) - 1) + 0.5))
+    return s[i]
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    submit_t: float
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    new_tokens: int = 0
+    preemptions: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+
+class ServingMetrics:
+    """Aggregates per-request traces plus engine-level counters."""
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self.traces: Dict[int, RequestTrace] = {}
+        self.decode_steps = 0
+        self.prefill_tokens = 0
+        self.preemptions = 0
+        self.occupancy_samples: List[float] = []
+        self._start: Optional[float] = None
+        self._end: Optional[float] = None
+
+    def now(self) -> float:
+        return self._clock()
+
+    def on_submit(self, req_id: int) -> None:
+        t = self.now()
+        if self._start is None:
+            self._start = t
+        self.traces[req_id] = RequestTrace(submit_t=t)
+
+    def on_first_token(self, req_id: int, prompt_len: int) -> None:
+        tr = self.traces[req_id]
+        if tr.first_token_t is None:
+            tr.first_token_t = self.now()
+        tr.new_tokens += 1
+        self.prefill_tokens += prompt_len
+
+    def on_decode_step(self, new_tokens: int, occupancy: float) -> None:
+        self.decode_steps += 1
+        self.occupancy_samples.append(occupancy)
+
+    def on_token(self, req_id: int) -> None:
+        self.traces[req_id].new_tokens += 1
+
+    def on_preempt(self, req_id: int) -> None:
+        self.preemptions += 1
+        tr = self.traces[req_id]
+        tr.preemptions += 1
+        # recompute semantics discard the victim's generated tokens; only
+        # delivered tokens may count toward throughput
+        tr.new_tokens = 0
+
+    def on_finish(self, req_id: int) -> None:
+        self.traces[req_id].finish_t = self.now()
+        self._end = self.now()
+
+    # ----------------------------------------------------------- summary
+
+    def summary(self) -> Dict[str, float]:
+        ttfts = [t.ttft for t in self.traces.values() if t.ttft is not None]
+        gen = sum(t.new_tokens for t in self.traces.values())
+        wall = ((self._end or self.now()) - (self._start or self.now())) or 1e-9
+        occ = self.occupancy_samples
+        return {
+            "requests": len(self.traces),
+            "generated_tokens": gen,
+            "tokens_per_s": gen / wall,
+            "wall_s": wall,
+            "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            "ttft_p90_s": _pct(ttfts, 0.9),
+            "decode_steps": self.decode_steps,
+            "preemptions": self.preemptions,
+            "cache_occupancy_mean": sum(occ) / len(occ) if occ else 0.0,
+            "cache_occupancy_peak": max(occ) if occ else 0.0,
+        }

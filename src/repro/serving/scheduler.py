@@ -1,0 +1,123 @@
+"""Admission + budget-aware scheduling for the elastic engine.
+
+Routing: ``Request.budget`` (fraction of full deployed params) maps onto a
+row of the nested FlexRank profile table via a cost table computed ONCE at
+construction (the seed recomputed the whole O(rows) table per request).
+Requests are queued FIFO per budget row; the engine serves one GAR-deployed
+row at a time (different rows are different realized weights, so they cannot
+share a forward), and within the active row new requests join the running
+batch at iteration granularity.
+
+Preemption: when the paged cache cannot cover the next token for every
+running sequence, the scheduler picks victims youngest-first (latest
+admission), frees their blocks, and re-queues them at the FRONT of their row
+queue for recompute — greedy decode makes the recomputed tokens identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (S_prompt,) int32
+    max_new_tokens: int = 16
+    budget: float = 1.0         # relative size in (0, 1]
+
+
+@dataclasses.dataclass
+class Result:
+    tokens: np.ndarray
+    budget_row: int
+    deployed_params: int
+    ttft_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class Sequence:
+    """One admitted request's scheduling state."""
+    req_id: int
+    request: Request
+    row: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    admissions: int = 0          # >1 after preemption
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.request.prompt)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.request.max_new_tokens
+
+    def reset_for_recompute(self) -> None:
+        self.generated.clear()
+
+
+class BudgetRouter:
+    """budget fraction -> profile-table row, from a precomputed cost table."""
+
+    def __init__(self, cost_table: np.ndarray):
+        self.cost_table = np.asarray(cost_table, np.int64)
+        self._fractions = self.cost_table / float(self.cost_table[-1])
+
+    def route(self, budget: float) -> int:
+        feasible = np.flatnonzero(self.cost_table
+                                  <= budget * self.cost_table[-1] + 1)
+        return int(feasible[-1]) if feasible.size else 0
+
+    def deployed_params(self, row: int) -> int:
+        return int(self.cost_table[row])
+
+
+class Scheduler:
+    def __init__(self, router: BudgetRouter):
+        self.router = router
+        self.queues: Dict[int, Deque[Sequence]] = {}
+        self._next_id = 0
+        self._order: Deque[int] = deque()   # row service order (FIFO arrival)
+
+    def submit(self, request: Request) -> Sequence:
+        row = self.router.route(request.budget)
+        seq = Sequence(req_id=self._next_id, request=request, row=row)
+        self._next_id += 1
+        self.queues.setdefault(row, deque()).append(seq)
+        return seq
+
+    def requeue_front(self, seq: Sequence) -> None:
+        """Preempted sequence: recompute from scratch, ahead of its row queue."""
+        seq.reset_for_recompute()
+        self.queues.setdefault(seq.row, deque()).appendleft(seq)
+
+    def pending_rows(self) -> List[int]:
+        return [r for r, q in self.queues.items() if q]
+
+    def next_row(self) -> Optional[int]:
+        """Row with the oldest waiting request (FIFO across rows)."""
+        best, best_id = None, None
+        for r, q in self.queues.items():
+            if q and (best_id is None or q[0].req_id < best_id):
+                best, best_id = r, q[0].req_id
+        return best
+
+    def pop(self, row: int) -> Optional[Sequence]:
+        q = self.queues.get(row)
+        if not q:
+            return None
+        seq = q.popleft()
+        seq.admissions += 1
+        return seq
+
+    def has_waiting(self, row: Optional[int] = None) -> bool:
+        if row is None:
+            return any(q for q in self.queues.values())
+        return bool(self.queues.get(row))
+
+    @staticmethod
+    def pick_victim(active: List[Sequence]) -> Sequence:
+        """Youngest-first preemption: least sunk work is thrown away."""
+        return max(active, key=lambda s: s.req_id)

@@ -107,7 +107,9 @@ def test_consolidation_reduces_kd_loss(pipe):
     cfg = pipe["cfg"]
     tdev = FR.table_device(pipe["table"])
     loss_fn = FR.make_consolidation_loss(cfg, pipe["infos"], tdev, pipe["dense"])
-    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=3, total_steps=30)
+    # 90 steps: 30 sat exactly at the noise floor of the stochastic-budget
+    # objective (eval CE of the smallest submodel regressed by ~0.02)
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=3, total_steps=90)
     state = adamw.init(pipe["fact"])
 
     @jax.jit
@@ -121,7 +123,7 @@ def test_consolidation_reduces_kd_loss(pipe):
     # eval CE before/after instead — the smallest submodel must improve.
     eval_batch = {"tokens": jnp.asarray(pipe["src"].batch_at(10_000)["tokens"])}
     ce_before = FR.eval_budget_loss(params, cfg, pipe["infos"], tdev, eval_batch, 0)
-    for i in range(30):
+    for i in range(90):
         b = {"tokens": jnp.asarray(pipe["src"].batch_at(i)["tokens"])}
         params, state, l = step(params, state, b, jax.random.PRNGKey(i))
     ce_after = FR.eval_budget_loss(params, cfg, pipe["infos"], tdev, eval_batch, 0)

@@ -9,7 +9,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticTokens, MemmapTokens, make_source

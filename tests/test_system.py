@@ -75,6 +75,8 @@ def test_dryrun_machinery_8device_subprocess(tmp_path):
         compiled = lowered.compile()
         coll = DR.parse_collective_bytes(compiled.as_text())
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
         out = {"flops": float(cost.get("flops", 0)),
                "coll": sum(v for k, v in coll.items() if not k.startswith("_")),
                "counts": coll["_counts"]}
