@@ -1,12 +1,22 @@
-"""Serving throughput: seed-style drain batching vs continuous batching on a
-mixed-budget request stream (the acceptance benchmark for the serving
+"""Serving throughput: drain batching vs continuous batching vs chunked
+prefill on mixed request streams (the acceptance benchmarks for the serving
 subsystem).
 
-The stream mixes budgets, prompt lengths, and generation lengths — the
-regime where drain batching stalls the whole batch on its longest member
-while continuous batching back-fills freed slots at iteration granularity.
-Derived column: tokens/s (and for the summary row, the continuous/drain
-speedup plus mean TTFT).
+Two workloads:
+
+  * ``mixed-budget`` — budgets, prompt lengths, and generation lengths all
+    vary; the regime where drain batching stalls the whole batch on its
+    longest member while continuous batching back-fills freed slots at
+    iteration granularity (PR-1 acceptance: continuous beats drain).
+  * ``long/short`` — a few long prompts interleaved with many short ones,
+    all slots available up front; the regime where the PR-1 continuous
+    engine's batch-1 full-prompt prefills serialize time-to-first-token,
+    while chunked prefill packs prompt chunks and running decodes into one
+    fused forward per iteration (PR-2 acceptance: mean TTFT cut >= 1.5x at
+    equal-or-better tokens/s).
+
+Derived columns: tokens/s per engine, the continuous/drain speedup, and the
+chunked-vs-continuous TTFT ratio with its queue/prefill breakdown.
 """
 import time
 
@@ -20,6 +30,8 @@ from repro.launch.train import build_flexrank_state
 from repro.models import common as cm
 from repro.models import transformer as tfm
 from repro.serving import ElasticEngine, Request
+
+PREFILL_CHUNK = 64
 
 
 def _request_stream(cfg, n, rng):
@@ -37,12 +49,31 @@ def _request_stream(cfg, n, rng):
     return reqs
 
 
+def _long_short_stream(cfg, n, rng):
+    """TTFT workload: every fourth prompt is long (them batch-1 prefills
+    dominate the PR-1 engine's admission), the rest short; single budget row
+    so TTFT differences come from prefill scheduling, not row serialization."""
+    reqs = []
+    for i in range(n):
+        if i % 4 == 0:
+            plen = int(rng.integers(72, 97))
+            max_new = int(rng.integers(4, 9))
+        else:
+            plen = int(rng.integers(4, 13))
+            max_new = int(rng.integers(8, 17))
+        prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        reqs.append(Request(prompt=prompt, max_new_tokens=max_new, budget=1.0))
+    return reqs
+
+
 def _run(engine, reqs, mode):
     t0 = time.perf_counter()
-    results = engine.generate(reqs, mode=mode)
+    engine.generate(reqs, mode=mode)
     wall = time.perf_counter() - t0
     gen = sum(r.max_new_tokens for r in reqs)
-    return results, wall, gen / wall
+    # drain never records ServingMetrics; don't hand back a stale object
+    metrics = engine.last_metrics if mode != "drain" else None
+    return metrics, wall, gen / wall
 
 
 def main():
@@ -63,8 +94,8 @@ def main():
     _, wall_d, tps_d = _run(engine, reqs, "drain")
     emit("serving_drain", wall_d * 1e6, f"{tps_d:.1f}")
 
-    res_c, wall_c, tps_c = _run(engine, reqs, "continuous")
-    s = engine.last_metrics.summary()
+    m_c, wall_c, tps_c = _run(engine, reqs, "continuous")
+    s = m_c.summary()
     emit("serving_continuous", wall_c * 1e6, f"{tps_c:.1f}")
     emit("serving_continuous_ttft_ms", s["ttft_mean_s"] * 1e6,
          f"{s['ttft_mean_s']*1e3:.1f}")
@@ -72,6 +103,40 @@ def main():
     if tps_c <= tps_d:
         print(f"# WARNING: continuous ({tps_c:.1f} tok/s) did not beat "
               f"drain ({tps_d:.1f} tok/s)")
+
+    # ---------------- chunked prefill vs PR-1 continuous (TTFT workload)
+    ls_reqs = _long_short_stream(cfg, 16, rng)
+    base = ElasticEngine(cfg, params_fact, table, infos,
+                         max_batch=16, max_len=256, block_size=8)
+    chunked = ElasticEngine(cfg, params_fact, table, infos,
+                            max_batch=16, max_len=256, block_size=8,
+                            prefill_chunk=PREFILL_CHUNK)
+    base.generate(ls_reqs, mode="continuous")      # warm traces
+    chunked.generate(ls_reqs, mode="continuous")
+
+    m_b, wall_b, tps_b = _run(base, ls_reqs, "continuous")
+    m_k, wall_k, tps_k = _run(chunked, ls_reqs, "continuous")
+    sb, sk = m_b.summary(), m_k.summary()
+    emit("serving_longshort_continuous", wall_b * 1e6, f"{tps_b:.1f}")
+    emit("serving_longshort_chunked", wall_k * 1e6, f"{tps_k:.1f}")
+    emit("serving_longshort_continuous_ttft_ms", sb["ttft_mean_s"] * 1e6,
+         f"{sb['ttft_mean_s']*1e3:.1f}")
+    emit("serving_longshort_chunked_ttft_ms", sk["ttft_mean_s"] * 1e6,
+         f"{sk['ttft_mean_s']*1e3:.1f}")
+    ttft_ratio = sb["ttft_mean_s"] / max(sk["ttft_mean_s"], 1e-9)
+    emit("serving_chunked_ttft_cut", sk["ttft_mean_s"] * 1e6,
+         f"{ttft_ratio:.2f}x")
+    print(f"# chunked TTFT breakdown: queue {sk['ttft_queue_mean_s']*1e3:.1f} ms, "
+          f"prefill {sk['ttft_prefill_mean_s']*1e3:.1f} ms, "
+          f"first-decode {sk['ttft_first_decode_mean_s']*1e3:.1f} ms "
+          f"({sk['mixed_iterations']} mixed iterations, "
+          f"chunk={PREFILL_CHUNK})")
+    if ttft_ratio < 1.5:
+        print(f"# WARNING: chunked prefill TTFT cut {ttft_ratio:.2f}x < 1.5x "
+              "acceptance target")
+    if tps_k < tps_b * 0.95:
+        print(f"# WARNING: chunked ({tps_k:.1f} tok/s) fell behind "
+              f"continuous ({tps_b:.1f} tok/s)")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,13 @@
 """Mixed-budget continuous batching demo: one elastic model, per-request
 budgets routed onto nested GAR-deployed submodels, served through the paged
-KV cache with iteration-level joins — with the drain-batch baseline and
+KV cache with iteration-level joins and chunked prefill fused into decode
+iterations — with the full-prompt-prefill and drain-batch baselines and
 printed serving metrics for comparison.
 
-  PYTHONPATH=src python examples/elastic_serving.py
+  PYTHONPATH=src python examples/elastic_serving.py --prefill-chunk 16
 """
+import argparse
+
 import numpy as np
 import jax
 
@@ -16,20 +19,30 @@ from repro.models import transformer as tfm
 from repro.serving import ElasticEngine, Request
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens per chunk in mixed prefill/decode "
+                         "iterations (0 = full-prompt prefill at admission)")
+    args = ap.parse_args(argv)
+
     cfg = get_config("gpt2-small", smoke=True)
     rng = np.random.default_rng(0)
     source = make_source(cfg.vocab_size, 64, 4, seed=0)
     dense = cm.instantiate(tfm.model_spec(cfg), jax.random.PRNGKey(0))
     params_fact, table, infos = build_flexrank_state(cfg, dense, source)
     engine = ElasticEngine(cfg, params_fact, table, infos,
-                           max_batch=4, max_len=64, block_size=8)
+                           max_batch=4, max_len=64, block_size=8,
+                           prefill_chunk=args.prefill_chunk or None)
+    baseline = ElasticEngine(cfg, params_fact, table, infos,
+                             max_batch=4, max_len=64, block_size=8)
 
-    # a bursty mixed stream: budgets 0.4/0.7/1.0, short and long responses
+    # a bursty mixed stream: budgets 0.4/0.7/1.0, short and long responses,
+    # and a couple of long prompts that would stall the baseline's decodes
     budgets = (0.4, 0.7, 1.0)
     reqs = []
     for i in range(10):
-        plen = int(rng.integers(4, 12))
+        plen = 40 if i % 5 == 1 else int(rng.integers(4, 12))
         max_new = 24 if i % 5 == 0 else int(rng.integers(2, 8))
         reqs.append(Request(prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
                             max_new_tokens=max_new, budget=budgets[i % 3]))
@@ -37,10 +50,13 @@ def main():
     # warm jit traces + GAR row realization so the printed numbers reflect
     # steady-state serving, not compilation
     engine.generate(reqs, mode="continuous")
+    baseline.generate(reqs, mode="continuous")
     engine.generate(reqs, mode="drain")
 
     results = engine.generate(reqs, mode="continuous")
-    print("== continuous batching (paged KV cache, mid-decode joins) ==")
+    label = (f"chunked prefill, chunk={args.prefill_chunk}"
+             if args.prefill_chunk else "full-prompt prefill")
+    print(f"== continuous batching (paged KV cache, {label}) ==")
     for i, (rq, rs) in enumerate(zip(reqs, results)):
         ttft = f"{rs.ttft_s*1e3:6.1f} ms" if rs.ttft_s is not None else "   n/a"
         print(f"req {i}: budget={rq.budget:.1f} -> row {rs.budget_row} "
@@ -48,19 +64,29 @@ def main():
               f"tokens={rs.tokens[:10].tolist()}...")
     m = engine.last_metrics.summary()
     print(f"\nthroughput : {m['tokens_per_s']:8.1f} tok/s over {m['wall_s']:.2f} s")
-    print(f"ttft       : mean {m['ttft_mean_s']*1e3:.1f} ms, "
+    print(f"ttft       : mean {m['ttft_mean_s']*1e3:.1f} ms "
+          f"(queue {m['ttft_queue_mean_s']*1e3:.1f} + "
+          f"prefill {m['ttft_prefill_mean_s']*1e3:.1f} + "
+          f"first-decode {m['ttft_first_decode_mean_s']*1e3:.1f}), "
           f"p90 {m['ttft_p90_s']*1e3:.1f} ms")
     print(f"kv cache   : occupancy mean {m['cache_occupancy_mean']:.2f}, "
           f"peak {m['cache_occupancy_peak']:.2f}; "
           f"preemptions {m['preemptions']}")
-    print(f"decode     : {m['decode_steps']} iterations for "
+    print(f"decode     : {m['decode_steps']} decode iterations "
+          f"({m['mixed_iterations']:.0f} mixed) for "
           f"{m['generated_tokens']} generated tokens")
+
+    baseline.generate(reqs, mode="continuous")
+    mb = baseline.last_metrics.summary()
+    print(f"\nfull-prompt-prefill baseline: {mb['tokens_per_s']:8.1f} tok/s, "
+          f"ttft mean {mb['ttft_mean_s']*1e3:.1f} ms "
+          f"(same stream, batch-1 prefill at admission)")
 
     import time
     t0 = time.perf_counter()
     engine.generate(reqs, mode="drain")
     drain_s = time.perf_counter() - t0
-    print(f"\ndrain-batch baseline: {m['generated_tokens']/drain_s:8.1f} tok/s "
+    print(f"drain-batch baseline        : {m['generated_tokens']/drain_s:8.1f} tok/s "
           f"(same stream, static batches)")
     return results
 

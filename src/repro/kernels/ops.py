@@ -17,7 +17,8 @@ from repro.kernels import ref
 from repro.kernels.gar_matmul import gar_matmul
 from repro.kernels.lowrank_matmul import lowrank_matmul
 from repro.kernels.mamba2_ssd import ssd
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_prefill_attention)
 from repro.kernels.rwkv6_wkv import wkv6
 
 
@@ -100,6 +101,28 @@ def paged_attention_forward(q, k_pool, v_pool, block_tables, context_lens, *,
     return ref.paged_attention_ref(q, k_pool, v_pool, block_tables,
                                    context_lens, softcap=softcap,
                                    window=window)
+
+
+def paged_prefill_attention_forward(q, k_pool, v_pool, block_tables, slot_ids,
+                                    context_lens, *, softcap: float = 0.0,
+                                    window=None, use_pallas=False):
+    """Chunked-prefill paged attention over a flat token batch (mixed
+    prefill/decode iterations). q: (T, Hq, D); pools: (NB, BS, Hkv, D);
+    block_tables: (B, MB); slot_ids/context_lens: (T,). Returns (T, Hq, D).
+
+    ``window`` (sliding-window lookback) is only supported on the oracle
+    path — the serving engine routes local-window layers there.
+    """
+    run, interp = _mode(use_pallas)
+    if run and window is None:
+        return paged_prefill_attention(q, k_pool, v_pool,
+                                       jnp.asarray(block_tables, jnp.int32),
+                                       jnp.asarray(slot_ids, jnp.int32),
+                                       jnp.asarray(context_lens, jnp.int32),
+                                       softcap=softcap, interpret=interp)
+    return ref.paged_prefill_attention_ref(q, k_pool, v_pool, block_tables,
+                                           slot_ids, context_lens,
+                                           softcap=softcap, window=window)
 
 
 def wkv6_forward(r, k, v, w, u, *, chunk: int = 64, use_pallas=False):

@@ -1,13 +1,22 @@
-"""Pallas paged decode-attention: one query token per sequence attends over a
+"""Pallas paged attention: decode and chunked-prefill variants over a
 block-paged KV cache whose blocks live at non-contiguous pool slots.
 
-Grid (B, MB): the per-sequence block table is a *scalar-prefetch* operand, so
-the BlockSpec index map DMAs exactly the K/V blocks the sequence owns —
-gathering from the pool without ever materializing a contiguous (B, T) cache.
-The MB axis is sequential per sequence; softmax runs in streaming (flash)
-form with running (max, denom, acc) scratch carried across blocks, and blocks
-past ``context_len`` are skipped entirely (their DMA still targets a valid
-pool slot — the shared null block 0 — so the index map stays in bounds).
+``paged_attention`` (decode): grid (B, MB), one query token per sequence. The
+per-sequence block table is a *scalar-prefetch* operand, so the BlockSpec
+index map DMAs exactly the K/V blocks the sequence owns — gathering from the
+pool without ever materializing a contiguous (B, T) cache. The MB axis is
+sequential per sequence; softmax runs in streaming (flash) form with running
+(max, denom, acc) scratch carried across blocks, and blocks past
+``context_len`` are skipped entirely (their DMA still targets a valid pool
+slot — the shared null block 0 — so the index map stays in bounds).
+
+``paged_prefill_attention`` (mixed chunked-prefill/decode iterations): grid
+(T, MB) over a *flat token batch* — several tokens may belong to the same
+sequence (a prefill chunk) while others are single decode tokens of other
+sequences. A third scalar-prefetch operand, ``slot_ids``, maps each token to
+its block-table row; per-token ``context_lens`` (= position + 1) express
+intra-chunk causality, because the chunk's own K/V is scattered into the
+pool before the kernel runs.
 
 Head/lane tiling note: shapes here are serving-sized (Hq x D panels); on real
 TPUs Hq*G and D should be padded to the (8, 128) tile by the ops.py wrapper.
@@ -26,12 +35,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(block_tables_ref, context_lens_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, bs: int, softcap: float, groups: int):
-    b = pl.program_id(0)
+def _flash_body(ctx, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                bs: int, softcap: float, groups: int):
+    """Shared streaming-softmax block step for both paged kernels: the grid
+    row (a batch slot for decode, a flat token for chunked prefill) has
+    already resolved its K/V block and ``ctx`` valid keys."""
     j = pl.program_id(1)
     mb = pl.num_programs(1)
-    ctx = context_lens_ref[b]
 
     @pl.when(j == 0)
     def _init():
@@ -76,6 +86,13 @@ def _kernel(block_tables_ref, context_lens_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
 
 
+def _kernel(block_tables_ref, context_lens_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, bs: int, softcap: float, groups: int):
+    ctx = context_lens_ref[pl.program_id(0)]
+    _flash_body(ctx, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                bs=bs, softcap=softcap, groups=groups)
+
+
 @functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
 def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     block_tables: jax.Array, context_lens: jax.Array, *,
@@ -110,3 +127,55 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         interpret=interpret,
     )(block_tables.astype(jnp.int32), context_lens.astype(jnp.int32),
       q, k_pool, v_pool)
+
+
+def _prefill_kernel(slot_ids_ref, block_tables_ref, context_lens_ref,
+                    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                    bs: int, softcap: float, groups: int):
+    """Grid's first axis is a flat token index instead of a batch slot; the
+    block table row was resolved through ``slot_ids`` by the index maps, so
+    the body only needs the per-token context length."""
+    ctx = context_lens_ref[pl.program_id(0)]
+    _flash_body(ctx, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                bs=bs, softcap=softcap, groups=groups)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_tables: jax.Array,
+                            slot_ids: jax.Array, context_lens: jax.Array, *,
+                            softcap: float = 0.0,
+                            interpret: bool = False) -> jax.Array:
+    """q: (T, Hq, D) flat chunk/decode tokens; pools: (NB, BS, Hkv, D);
+    block_tables: (B, MB); slot_ids/context_lens: (T,). Returns (T, Hq, D)."""
+    t, hq, d = q.shape
+    _, bs, hkv, _ = k_pool.shape
+    mb = block_tables.shape[1]
+    groups = hq // hkv
+    assert groups * hkv == hq, (hq, hkv)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(t, mb),
+        in_specs=[
+            pl.BlockSpec((1, hq, d), lambda i, j, sid, bt, cl: (i, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, d),
+                         lambda i, j, sid, bt, cl: (bt[sid[i], j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, d),
+                         lambda i, j, sid, bt, cl: (bt[sid[i], j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, d), lambda i, j, sid, bt, cl: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_prefill_kernel, bs=bs, softcap=softcap,
+                          groups=groups),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, hq, d), q.dtype),
+        interpret=interpret,
+    )(slot_ids.astype(jnp.int32), block_tables.astype(jnp.int32),
+      context_lens.astype(jnp.int32), q, k_pool, v_pool)

@@ -70,6 +70,27 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, context_lens, *,
     return out.reshape(b, hq, d).astype(q.dtype)
 
 
+def paged_prefill_attention_ref(q, k_pool, v_pool, block_tables, slot_ids,
+                                context_lens, *, softcap=0.0, window=None):
+    """Chunked-prefill attention over a block-paged KV cache.
+
+    Generalizes ``paged_attention_ref`` from one-query-per-sequence to a flat
+    token batch: query ``t`` belongs to batch slot ``slot_ids[t]`` and attends
+    over the first ``context_lens[t]`` keys of that slot's block table (its
+    own K/V must already be scattered into the pool, so intra-chunk causality
+    is expressed purely through per-token context lengths).
+
+    q: (T, Hq, D) — flat chunk/decode tokens, pre-RoPE'd.
+    block_tables: (B, MB) int32 — per-slot block ids (0 = null block).
+    slot_ids: (T,) int32 — row of ``block_tables`` for each token (point pad
+    tokens at a row of null blocks).
+    context_lens: (T,) int32 — ``position + 1`` of each token in its sequence.
+    """
+    per_token_tables = jnp.take(block_tables, slot_ids, axis=0)   # (T, MB)
+    return paged_attention_ref(q, k_pool, v_pool, per_token_tables,
+                               context_lens, softcap=softcap, window=window)
+
+
 def ssd_ref(x, dt, a, b, c):
     """Sequential SSD recurrence. x: (BH,S,P); dt: (BH,S); a: (BH,); b/c: (BH,S,N)."""
     bh, s, p = x.shape

@@ -1,9 +1,11 @@
 """Serving launcher: build (or load) an elastic model, serve a stream of
 requests at mixed budgets through the GAR-deployed submodels with the
-continuous-batching engine (paged KV cache, iteration-level join).
+continuous-batching engine (paged KV cache, iteration-level join, and —
+with ``--prefill-chunk`` — chunked prefill fused into decode iterations).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small --smoke \
-      --requests 6 --budgets 0.4,0.7,1.0 --engine continuous
+      --requests 6 --budgets 0.4,0.7,1.0 --engine continuous \
+      --prefill-chunk 64
 """
 from __future__ import annotations
 
@@ -36,7 +38,17 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="prompt tokens per chunk for mixed prefill/decode "
+                         "iterations (0 = full-prompt prefill at admission)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="total tokens per mixed iteration "
+                         "(0 = max_batch + prefill_chunk; requires "
+                         "--prefill-chunk)")
     args = ap.parse_args(argv)
+    if args.token_budget and not args.prefill_chunk:
+        ap.error("--token-budget only applies to mixed iterations; "
+                 "set --prefill-chunk too")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     rng = np.random.default_rng(args.seed)
@@ -46,7 +58,9 @@ def main(argv=None):
     params_fact, table, infos = build_flexrank_state(cfg, dense, source)
     engine = ElasticEngine(cfg, params_fact, table, infos,
                            max_batch=args.max_batch, max_len=args.max_len,
-                           block_size=args.block_size)
+                           block_size=args.block_size,
+                           prefill_chunk=args.prefill_chunk or None,
+                           token_budget=args.token_budget or None)
 
     budgets = [float(b) for b in args.budgets.split(",")]
     reqs = []
@@ -61,9 +75,16 @@ def main(argv=None):
     if engine.last_metrics is not None:
         s = engine.last_metrics.summary()
         print(f"# serving: {s['tokens_per_s']:.1f} tok/s, "
-              f"ttft mean {s['ttft_mean_s']*1e3:.1f} ms, "
+              f"ttft mean {s['ttft_mean_s']*1e3:.1f} ms "
+              f"(queue {s['ttft_queue_mean_s']*1e3:.1f} + "
+              f"prefill {s['ttft_prefill_mean_s']*1e3:.1f} + "
+              f"first-decode {s['ttft_first_decode_mean_s']*1e3:.1f}), "
               f"cache occupancy peak {s['cache_occupancy_peak']:.2f}, "
               f"preemptions {s['preemptions']}")
+        if args.prefill_chunk:
+            print(f"# chunked prefill: chunk={args.prefill_chunk}, "
+                  f"budget={engine.token_budget}, "
+                  f"{s['mixed_iterations']:.0f} mixed iterations")
     return results
 
 

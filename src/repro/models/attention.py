@@ -242,6 +242,57 @@ def paged_attn_apply(
     return y, k_pool, v_pool
 
 
+def paged_prefill_attn_apply(
+    p: Dict,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    slot_ids: Array,
+    positions: Array,
+    block_tables: Array,
+    k_pool: Array,
+    v_pool: Array,
+    window: Optional[Array | int] = None,
+    ranks: Optional[Dict[str, Array]] = None,
+    use_pallas=False,
+) -> Tuple[Array, Array, Array]:
+    """Mixed chunked-prefill/decode self-attention over a block-paged cache.
+
+    x: (1, T, d) — a *flat token batch*: each token t belongs to batch slot
+    ``slot_ids[t]`` and sits at ``positions[t]`` in that slot's sequence.
+    Prefill chunks appear as runs of consecutive positions of one slot;
+    decode tokens are singleton runs. Every token's K/V is scattered into
+    (block_tables[slot, pos // BS], pos % BS) *before* attention, so queries
+    see their own chunk's earlier keys through the pool and intra-chunk
+    causality reduces to the per-token context length ``pos + 1``.
+
+    Pad tokens must point ``slot_ids`` at a block-table row made of null
+    blocks (the engine appends one) so their writes and reads never touch a
+    live sequence. Returns (y, k_pool, v_pool).
+    """
+    r = ranks or {}
+    hd = cfg.resolved_head_dim
+    t = x.shape[1]
+    bs = k_pool.shape[1]
+
+    q, k, v = project_qkv(p, x, cfg, ranks=r, positions=positions[None, :])
+
+    blk = block_tables[slot_ids, positions // bs]                   # (T,)
+    off = positions % bs
+    # distinct (slot, pos) pairs -> distinct (blk, off) targets; pads all
+    # write identical values to the null block, so duplicates are benign
+    k_pool = k_pool.at[blk, off].set(k[0].astype(k_pool.dtype))
+    v_pool = v_pool.at[blk, off].set(v[0].astype(v_pool.dtype))
+
+    from repro.kernels import ops
+    out = ops.paged_prefill_attention_forward(
+        q[0], k_pool, v_pool, block_tables, slot_ids, positions + 1,
+        softcap=cfg.attn_logit_softcap, window=window, use_pallas=use_pallas)
+    out = out.reshape(1, t, cfg.num_heads * hd)
+    y = linear(p["o"], out, rank=r.get("o"), tap="o")
+    return y, k_pool, v_pool
+
+
 def ffn_apply(p: Dict, x: Array, *, ranks: Optional[Dict[str, Array]] = None) -> Array:
     r = ranks or {}
     gate = linear(p["gate"], x, rank=r.get("gate"), tap="gate")

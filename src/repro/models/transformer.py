@@ -658,6 +658,49 @@ def paged_compatible(cfg: ModelConfig) -> bool:
             and all(s.kind in ("attn", "attn_dense") for s in cfg.segments))
 
 
+def _run_paged_segments(params, cfg, x, caches, ranks, attn_fn):
+    """Shared segment loop for the paged decode/mixed steps: rms_norm ->
+    paged attention (``attn_fn``) -> residual -> rms_norm -> moe/ffn ->
+    residual, scanned per segment — keeping the two paths structurally
+    identical is what upholds the serving engine's token-identity guarantee.
+
+    ``attn_fn(p_attn, h, window, k_pool, v_pool, ranks)`` -> (y, k_pool,
+    v_pool); ``window`` is the per-layer traced window, or None for
+    all-global configs (those hit the Pallas kernel; local-window layers
+    route to the oracle path inside ops.py). Returns (x, new segment pools).
+    """
+    windowed = bool(cfg.local_window and cfg.global_every)
+    new_segments = []
+    offset = 0
+    for i, seg in enumerate(cfg.segments):
+        seg_ranks = _seg_ranks(ranks, i)
+        pool = caches["segments"][i]
+        moe = cfg.moe is not None and seg.kind == "attn"
+        windows = window_schedule(cfg, seg.count, offset)
+
+        def body(carry, xs):
+            xx = carry
+            p_l, win_l, kp_l, vp_l, ranks_l = xs
+            h = cm.rms_norm(xx, p_l["ln_attn"], eps=cfg.norm_eps)
+            y, kp_l, vp_l = attn_fn(p_l["attn"], h,
+                                    win_l if windowed else None,
+                                    kp_l, vp_l, rget_tree(ranks_l, "attn"))
+            xx = xx + y
+            h = cm.rms_norm(xx, p_l["ln_mlp"], eps=cfg.norm_eps)
+            if moe:
+                y, _ = moe_mod.moe_apply(p_l["mlp"], h, cfg,
+                                         ranks=rget_tree(ranks_l, "mlp"))
+            else:
+                y = attn.ffn_apply(p_l["mlp"], h, ranks=rget_tree(ranks_l, "mlp"))
+            return xx + y, {"k": kp_l, "v": vp_l}
+
+        x, new_pool = _scan(body, x, (params["segments"][i], windows,
+                                      pool["k"], pool["v"], seg_ranks))
+        new_segments.append(new_pool)
+        offset += seg.count
+    return x, new_segments
+
+
 def paged_decode_step(
     params: Dict,
     cfg: ModelConfig,
@@ -680,40 +723,62 @@ def paged_decode_step(
     positions = caches["positions"]
     block_tables = caches["block_tables"]
     x = embed_tokens(params, tokens, cfg)
-    # all-global configs hit the Pallas kernel; local-window layers carry a
-    # traced per-layer window and route to the oracle path inside ops.py
-    windowed = bool(cfg.local_window and cfg.global_every)
 
-    new_caches = {"positions": positions + 1, "block_tables": block_tables,
-                  "segments": []}
-    offset = 0
-    for i, seg in enumerate(cfg.segments):
-        seg_ranks = _seg_ranks(ranks, i)
-        pool = caches["segments"][i]
-        moe = cfg.moe is not None and seg.kind == "attn"
-        windows = window_schedule(cfg, seg.count, offset)
+    def attn_fn(p, h, window, kp, vp, attn_ranks):
+        return attn.paged_attn_apply(
+            p, h, cfg, positions=positions, block_tables=block_tables,
+            k_pool=kp, v_pool=vp, window=window, ranks=attn_ranks,
+            use_pallas=use_pallas)
 
-        def body(carry, xs):
-            xx = carry
-            p_l, win_l, kp_l, vp_l, ranks_l = xs
-            h = cm.rms_norm(xx, p_l["ln_attn"], eps=cfg.norm_eps)
-            y, kp_l, vp_l = attn.paged_attn_apply(
-                p_l["attn"], h, cfg, positions=positions,
-                block_tables=block_tables, k_pool=kp_l, v_pool=vp_l,
-                window=win_l if windowed else None,
-                ranks=rget_tree(ranks_l, "attn"),
-                use_pallas=use_pallas)
-            xx = xx + y
-            h = cm.rms_norm(xx, p_l["ln_mlp"], eps=cfg.norm_eps)
-            if moe:
-                y, _ = moe_mod.moe_apply(p_l["mlp"], h, cfg,
-                                         ranks=rget_tree(ranks_l, "mlp"))
-            else:
-                y = attn.ffn_apply(p_l["mlp"], h, ranks=rget_tree(ranks_l, "mlp"))
-            return xx + y, {"k": kp_l, "v": vp_l}
+    x, segments = _run_paged_segments(params, cfg, x, caches, ranks, attn_fn)
+    return lm_logits(params, x, cfg), {"positions": positions + 1,
+                                       "block_tables": block_tables,
+                                       "segments": segments}
 
-        x, new_pool = _scan(body, x, (params["segments"][i], windows,
-                                      pool["k"], pool["v"], seg_ranks))
-        new_caches["segments"].append(new_pool)
-        offset += seg.count
-    return lm_logits(params, x, cfg), new_caches
+
+def paged_mixed_step(
+    params: Dict,
+    cfg: ModelConfig,
+    caches: Dict,
+    tokens: Array,
+    *,
+    ranks: Optional[Dict] = None,
+    use_pallas=False,
+) -> Tuple[Array, Dict]:
+    """One *mixed* chunked-prefill/decode iteration over the paged KV cache.
+
+    tokens: (1, T) — a flat token batch: the running decode batch (one token
+    per decoding slot) concatenated with FIFO prefill chunks, all under one
+    per-iteration token budget (Sarathi/vLLM-style fused iterations). Unlike
+    ``paged_decode_step`` there is no one-token-per-slot layout: ``caches``
+    carries per-token routing instead —
+
+      {'slot_ids':  (T,) block-table row per token (pads -> a null row),
+       'positions': (T,) 0-based position of each token in its sequence,
+       'block_tables': (B(+null rows), MB),
+       'segments': [{'k': (count, NB, BS, Hkv, D), 'v': ...} per segment]}
+
+    Each token's K/V is scattered into its slot's blocks, then it attends
+    over its own ``position + 1`` keys — so one dispatch advances every
+    decoding sequence by a token AND pushes prefill chunks through, instead
+    of stopping the world for a batch-1 prompt forward. Returns (logits
+    (1, T, V), new caches); logits at a chunk's final prompt token seed the
+    sequence's first generated token.
+    """
+    assert paged_compatible(cfg), cfg.name
+    slot_ids = caches["slot_ids"]
+    positions = caches["positions"]
+    block_tables = caches["block_tables"]
+    x = embed_tokens(params, tokens, cfg)
+
+    def attn_fn(p, h, window, kp, vp, attn_ranks):
+        return attn.paged_prefill_attn_apply(
+            p, h, cfg, slot_ids=slot_ids, positions=positions,
+            block_tables=block_tables, k_pool=kp, v_pool=vp, window=window,
+            ranks=attn_ranks, use_pallas=use_pallas)
+
+    x, segments = _run_paged_segments(params, cfg, x, caches, ranks, attn_fn)
+    return lm_logits(params, x, cfg), {"slot_ids": slot_ids,
+                                       "positions": positions,
+                                       "block_tables": block_tables,
+                                       "segments": segments}

@@ -2,9 +2,17 @@
 leave *mid-decode*, instead of draining the whole batch before admitting new
 work (Orca-style continuous batching).
 
-The batcher owns only slot state — which sequence sits where and what token
-it feeds next. Block accounting lives in ``kv_cache``; admission policy in
-``scheduler``; the engine composes the three.
+Two ways into a slot: ``join`` seats an already-prefilled sequence directly
+in the ``decoding`` state (the drain/PR-1 continuous path), while
+``seat_prefill`` seats a freshly admitted sequence in the ``prefilling``
+state — the chunked-prefill engine then pushes its prompt through one chunk
+per mixed iteration and flips it to ``decoding`` via ``to_decoding`` when
+the last chunk lands. ``prefill_slots()`` iterates prefilling seats in
+admission order, which is what makes per-row chunk scheduling FIFO.
+
+The batcher owns only slot state — which sequence sits where, what state it
+is in, and what token it feeds next. Block accounting lives in ``kv_cache``;
+admission policy in ``scheduler``; the engine composes the three.
 """
 from __future__ import annotations
 
@@ -20,6 +28,8 @@ class ContinuousBatcher:
         self.max_batch = max_batch
         self.slots: List[Optional[Sequence]] = [None] * max_batch
         self._next_token = np.zeros(max_batch, np.int32)
+        self._seated_at = np.zeros(max_batch, np.int64)   # admission order
+        self._seat_counter = 0
 
     # ------------------------------------------------------------- slots
 
@@ -28,6 +38,16 @@ class ContinuousBatcher:
 
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def decode_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and s.state == "decoding"]
+
+    def prefill_slots(self) -> List[int]:
+        """Slots holding mid-prefill sequences, in admission (FIFO) order."""
+        slots = [i for i, s in enumerate(self.slots)
+                 if s is not None and s.state == "prefilling"]
+        return sorted(slots, key=lambda i: self._seated_at[i])
 
     def active_sequences(self) -> List[Sequence]:
         return [s for s in self.slots if s is not None]
@@ -44,11 +64,33 @@ class ContinuousBatcher:
 
     # -------------------------------------------------------- join/leave
 
-    def join(self, slot: int, seq: Sequence, first_token: int) -> None:
-        """Seat a prefilled sequence; it decodes from ``first_token`` on the
-        next iteration, alongside whatever is already mid-flight."""
+    def _seat(self, slot: int, seq: Sequence) -> None:
         assert self.slots[slot] is None, slot
         self.slots[slot] = seq
+        self._seated_at[slot] = self._seat_counter
+        self._seat_counter += 1
+
+    def join(self, slot: int, seq: Sequence, first_token: int) -> None:
+        """Seat an already-prefilled sequence; it decodes from
+        ``first_token`` on the next iteration, alongside whatever is already
+        mid-flight."""
+        self._seat(slot, seq)
+        seq.state = "decoding"
+        self._next_token[slot] = first_token
+
+    def seat_prefill(self, slot: int, seq: Sequence) -> None:
+        """Seat a freshly admitted sequence for chunked prefill: it owns the
+        slot but feeds no decode token until its last chunk lands."""
+        self._seat(slot, seq)
+        seq.state = "prefilling"
+        self._next_token[slot] = 0
+
+    def to_decoding(self, slot: int, first_token: int) -> None:
+        """Last prefill chunk landed: the sequence decodes from
+        ``first_token`` starting next iteration."""
+        seq = self.slots[slot]
+        assert seq is not None and seq.state == "prefilling", slot
+        seq.state = "decoding"
         self._next_token[slot] = first_token
 
     def leave(self, slot: int) -> Sequence:
@@ -60,16 +102,20 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------- device step
 
+    def next_token(self, slot: int) -> int:
+        return int(self._next_token[slot])
+
     def feed_tokens(self) -> np.ndarray:
         """(B, 1) int32 next-token batch (idle slots feed token 0)."""
         return self._next_token[:, None].copy()
 
     def advance(self, sampled: np.ndarray) -> List[int]:
-        """Record one decode iteration's sampled tokens (B,). Returns slots
-        whose sequence just finished."""
+        """Record one decode iteration's sampled tokens (B,). Only decoding
+        slots advance (mid-prefill seats produced no decode token this
+        iteration). Returns slots whose sequence just finished."""
         finished = []
         for i, seq in enumerate(self.slots):
-            if seq is None:
+            if seq is None or seq.state != "decoding":
                 continue
             tok = int(sampled[i])
             seq.generated.append(tok)

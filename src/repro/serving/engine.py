@@ -4,15 +4,30 @@ Holds one set of shared FlexRank weights plus the nested profile table; each
 request names a budget, the scheduler routes it to a GAR-deployed row
 ("train once, deploy everywhere") and the engine serves it through:
 
-  * a single-pass batched prefill (one forward over the whole prompt writing
-    the KV cache — the seed teacher-forced one token at a time),
-  * a block-paged KV cache with a free-list allocator (``kv_cache``),
+  * **chunked prefill fused into decode iterations** (``prefill_chunk``
+    set): each iteration builds one flat token batch — every decoding
+    sequence contributes its next token, and the remaining per-iteration
+    token budget is filled with FIFO prompt chunks of at most
+    ``prefill_chunk`` tokens — and runs it through a single
+    ``paged_mixed_step`` forward (Sarathi/vLLM-style stall-free batching).
+    Long prompts no longer stop the world: decodes advance every iteration
+    and TTFT stops scaling with the running batch's prompt lengths,
+  * a block-paged KV cache with a free-list allocator (``kv_cache``) whose
+    blocks arrive chunk-by-chunk during prefill,
   * iteration-level continuous batching (``batcher``): finished sequences
     free their slot mid-flight and waiting requests join the running batch
     without draining it,
   * budget-aware admission + youngest-first preemption on cache pressure
     (``scheduler``), with recompute semantics (greedy decode makes the
-    regenerated tokens identical).
+    regenerated tokens identical) — the victim may be *mid-prefill*, in
+    which case its partial chunks are discarded with its blocks.
+
+Knobs: ``prefill_chunk`` (prompt tokens per chunk; ``None`` keeps the PR-1
+behavior of one batch-1 full-prompt forward at admission — the benchmark
+baseline) and ``token_budget`` (total tokens per mixed iteration, default
+``max_batch + prefill_chunk``; decode tokens are reserved first, so a long
+prefill can never starve running decodes). See ``scheduler`` for the
+waiting -> prefilling -> decoding state machine.
 
 Families outside the paged path (mamba/rwkv/zamba/MLA/enc-dec) fall back to
 the drain-batch engine, itself upgraded to single-pass prefill.
@@ -41,6 +56,8 @@ class ElasticEngine:
     def __init__(self, cfg: ModelConfig, params_fact, table, infos, *,
                  max_batch: int = 8, max_len: int = 256,
                  block_size: int = 16, num_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 token_budget: Optional[int] = None,
                  use_pallas=False):
         self.cfg = cfg
         self.params_fact = params_fact
@@ -51,6 +68,20 @@ class ElasticEngine:
         self.block_size = block_size
         self.num_blocks = num_blocks
         self.use_pallas = use_pallas
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.prefill_chunk = prefill_chunk
+        if token_budget is not None and prefill_chunk is None:
+            raise ValueError(
+                "token_budget only applies to mixed chunked-prefill "
+                "iterations; set prefill_chunk too")
+        if token_budget is None and prefill_chunk is not None:
+            token_budget = max_batch + prefill_chunk
+        if token_budget is not None and token_budget < max_batch + 1:
+            raise ValueError(
+                f"token_budget {token_budget} leaves no room for prefill "
+                f"beside {max_batch} decode slots (need >= max_batch + 1)")
+        self.token_budget = token_budget
         self._deployed: Dict[int, object] = {}
         # deployed-param cost per budget row, computed ONCE (the seed redid
         # this O(rows) scan inside every routing call)
@@ -67,6 +98,10 @@ class ElasticEngine:
         # whole pool every step
         self._paged_jit = jax.jit(
             lambda p, caches, tok: tfm.paged_decode_step(
+                p, self.cfg, caches, tok, use_pallas=self.use_pallas),
+            donate_argnums=(1,))
+        self._mixed_jit = jax.jit(
+            lambda p, caches, tok: tfm.paged_mixed_step(
                 p, self.cfg, caches, tok, use_pallas=self.use_pallas),
             donate_argnums=(1,))
 
@@ -87,8 +122,9 @@ class ElasticEngine:
     def generate(self, requests: List[Request], *, mode: str = "auto",
                  metrics: Optional[ServingMetrics] = None) -> List[Result]:
         """Serve ``requests`` to completion. ``mode``: 'continuous' (paged
-        cache + iteration-level batching), 'drain' (seed-style static
-        batches), or 'auto' (continuous whenever the family supports it)."""
+        cache + iteration-level batching; chunked prefill when the
+        ``prefill_chunk`` knob is set), 'drain' (seed-style static batches),
+        or 'auto' (continuous whenever the family supports it)."""
         if mode not in ("auto", "continuous", "drain"):
             raise ValueError(f"unknown mode {mode!r}")
         if mode == "auto":
@@ -118,9 +154,11 @@ class ElasticEngine:
             metrics.on_submit(seq.req_id)
             submitted.append(seq)
         results: Dict[int, Result] = {}
+        serve_row = (self._serve_row if self.prefill_chunk is None
+                     else self._serve_row_mixed)
         while sched.has_waiting():
             row = sched.next_row()
-            self._serve_row(row, sched, metrics, results)
+            serve_row(row, sched, metrics, results)
         return [results[s.req_id] for s in submitted]
 
     def _finish(self, seq: Sequence, metrics, results) -> None:
@@ -135,7 +173,9 @@ class ElasticEngine:
     def _serve_row(self, row: int, sched: Scheduler, metrics: ServingMetrics,
                    results: Dict[int, Result]) -> None:
         """Run one budget row's continuous-batching loop until its queue and
-        batch drain. Requests submitted for this row join mid-decode."""
+        batch drain. Requests submitted for this row join mid-decode.
+        (PR-1 baseline path: each admission prefills the whole prompt in one
+        batch-1 forward before decode resumes.)"""
         params = self._realize(row)
         cache = PagedKVCache(self.cfg, max_batch=self.max_batch,
                              max_len=self.max_len, block_size=self.block_size,
@@ -179,12 +219,15 @@ class ElasticEngine:
             if not cache.can_allocate(nxt.prompt_len):
                 break                          # wait for blocks to free up
             seq = sched.pop(row)
+            metrics.on_admit(seq.req_id)
             if seq.request.max_new_tokens <= 0:   # prompt-only, matches drain
                 self._finish(seq, metrics, results)
                 continue
             cache.allocate_slot(slot, seq.prompt_len)
             first = self._prefill_slot(params, cache, slot, seq)
+            metrics.on_prefill_end(seq.req_id)
             seq.generated.append(first)
+            seq.prefill_pos = seq.prompt_len
             metrics.on_first_token(seq.req_id, seq.prompt_len)
             if seq.done:                       # max_new_tokens == 1
                 cache.free_slot(slot)
@@ -207,27 +250,186 @@ class ElasticEngine:
         cache.write_prefill(slot, state["segments"])
         return int(np.asarray(jnp.argmax(logits[0, plen - 1])))
 
+    def _block_holders(self, cache, batcher):
+        """Seated sequences that actually own blocks — the only useful
+        victims (evicting a zero-block mid-prefill seat frees nothing)."""
+        return [s for s in batcher.active_sequences()
+                if cache.slots[batcher.slot_of(s)].blocks]
+
+    def _evict(self, victim, sched, cache, batcher, metrics) -> int:
+        """Preempt one sequence: free its slot + blocks, re-queue at the row
+        front for recompute. Returns the vacated slot."""
+        vslot = batcher.slot_of(victim)
+        batcher.leave(vslot)
+        cache.free_slot(vslot)
+        sched.requeue_front(victim)
+        metrics.on_preempt(victim.req_id)
+        return vslot
+
     def _reserve_or_preempt(self, sched, cache, batcher, metrics):
-        """Reserve next-token room for every active slot; under cache
-        pressure evict the youngest sequence (freed + re-queued for
-        recompute) until the rest fit."""
-        for slot in batcher.active_slots():
+        """Reserve next-token room for every decoding slot; under cache
+        pressure evict the youngest block-holding sequence (decoding OR
+        mid-prefill; freed + re-queued for recompute) until the rest fit."""
+        for slot in batcher.decode_slots():
             while (cache.token_append_needs_block(slot)
                    and cache.allocator.free_count == 0):
-                active = batcher.active_sequences()
-                victim = Scheduler.pick_victim(active)
-                vslot = batcher.slot_of(victim)
-                if vslot == slot and len(active) == 1:
+                victim = Scheduler.pick_victim(
+                    self._block_holders(cache, batcher))
+                if (victim is batcher.slots[slot]
+                        and batcher.num_active == 1):
                     raise CacheOOM(
                         f"sequence {victim.req_id} alone exceeds the pool")
-                batcher.leave(vslot)
-                cache.free_slot(vslot)
-                sched.requeue_front(victim)
-                metrics.on_preempt(victim.req_id)
+                vslot = self._evict(victim, sched, cache, batcher, metrics)
                 if vslot == slot:
                     break                      # the appender itself was evicted
-            if batcher.slots[slot] is not None:
+            seq = batcher.slots[slot]
+            if seq is not None and seq.state == "decoding":
                 cache.append_token(slot)
+
+    # ------------------------------ chunked prefill / mixed iterations
+
+    def _bucket_tokens(self, used: int) -> int:
+        """Flat-batch width bucket: smallest power of two >= used (floor 8),
+        capped at the token budget — O(log budget) jit traces, and pure
+        decode iterations don't pay for unused prefill budget."""
+        t = 8
+        while t < used:
+            t *= 2
+        return min(t, max(self.token_budget, used))
+
+    def _serve_row_mixed(self, row: int, sched: Scheduler,
+                         metrics: ServingMetrics,
+                         results: Dict[int, Result]) -> None:
+        """One budget row's chunked-prefill loop: every iteration advances
+        the whole decode batch by one token and pushes FIFO prompt chunks
+        through the same fused forward, under ``token_budget`` tokens."""
+        params = self._realize(row)
+        cache = PagedKVCache(self.cfg, max_batch=self.max_batch,
+                             max_len=self.max_len, block_size=self.block_size,
+                             num_blocks=self.num_blocks)
+        batcher = ContinuousBatcher(self.max_batch)
+
+        while True:
+            # admission: seat waiting requests; blocks arrive per chunk
+            for slot in batcher.free_slots():
+                if not sched.has_waiting(row):
+                    break
+                seq = sched.pop(row)
+                metrics.on_admit(seq.req_id)
+                if seq.request.max_new_tokens <= 0:
+                    self._finish(seq, metrics, results)
+                    continue
+                if seq.prompt_len > self.max_len:
+                    raise CacheOOM(f"sequence of {seq.prompt_len} tokens "
+                                   f"exceeds max_len {self.max_len}")
+                cache.open_slot(slot)
+                batcher.seat_prefill(slot, seq)
+            if batcher.num_active == 0:
+                break                        # row drained (all slots free)
+
+            # decode priority: reserve next-token room before any prefill
+            self._reserve_or_preempt(sched, cache, batcher, metrics)
+            decode_slots = batcher.decode_slots()
+
+            # FIFO chunk plan under the leftover budget, clipped to what the
+            # free list can actually cover right now
+            budget_left = self.token_budget - len(decode_slots)
+            prefilling = [batcher.slots[s] for s in batcher.prefill_slots()]
+            chunks = []                      # (slot, seq, start, n)
+            for seq, want in Scheduler.plan_prefill_chunks(
+                    prefilling, budget_left, self.prefill_chunk):
+                slot = batcher.slot_of(seq)
+                got = cache.extend_slot(slot, want, clip=True)
+                if got:
+                    chunks.append((slot, seq, seq.prefill_pos, got))
+
+            if not decode_slots and not chunks:
+                if batcher.num_active == 0:
+                    continue                 # everyone was preempted
+                self._unstick(sched, cache, batcher, metrics)
+                continue
+
+            logits = self._dispatch_mixed(params, cache, batcher,
+                                          decode_slots, chunks)
+            sampled = np.asarray(jnp.argmax(logits[0], axis=-1), np.int32)
+
+            # commit decodes first: `advance` must only see sequences that
+            # actually decoded this iteration, not freshly flipped ones
+            sampled_b = np.zeros(self.max_batch, np.int32)
+            for i, slot in enumerate(decode_slots):
+                sampled_b[slot] = sampled[i]
+                metrics.on_token(batcher.slots[slot].req_id)
+            for slot in batcher.advance(sampled_b):
+                seq = batcher.leave(slot)
+                cache.free_slot(slot)
+                self._finish(seq, metrics, results)
+
+            # commit prefill chunks; flat index of a chunk's last token is
+            # its offset right after the decode batch
+            flat = len(decode_slots)
+            total_chunk = 0
+            for slot, seq, start, n in chunks:
+                seq.prefill_pos = start + n
+                total_chunk += n
+                metrics.on_prefill_chunk(n)
+                if seq.prefill_pos == seq.prompt_len:
+                    metrics.on_prefill_end(seq.req_id)
+                    first = int(sampled[flat + n - 1])
+                    seq.generated.append(first)
+                    metrics.on_first_token(seq.req_id)
+                    if seq.done:             # max_new_tokens == 1
+                        batcher.leave(slot)
+                        cache.free_slot(slot)
+                        self._finish(seq, metrics, results)
+                    else:
+                        batcher.to_decoding(slot, first)
+                flat += n
+            metrics.on_mixed_step(len(decode_slots), total_chunk,
+                                  cache.occupancy())
+
+    def _dispatch_mixed(self, params, cache, batcher, decode_slots, chunks):
+        """Build the flat token batch (decode tokens then chunks, padded to a
+        width bucket) and run one fused ``paged_mixed_step``."""
+        used = len(decode_slots) + sum(n for _, _, _, n in chunks)
+        width = self._bucket_tokens(used)
+        tok = np.zeros(width, np.int32)
+        sid = np.full(width, self.max_batch, np.int32)   # pads -> null row
+        pos = np.zeros(width, np.int32)
+        i = 0
+        for slot in decode_slots:
+            tok[i] = batcher.next_token(slot)
+            sid[i] = slot
+            pos[i] = cache.slots[slot].num_tokens - 1
+            i += 1
+        for slot, seq, start, n in chunks:
+            tok[i: i + n] = np.asarray(seq.request.prompt[start: start + n],
+                                       np.int32)
+            sid[i: i + n] = slot
+            pos[i: i + n] = np.arange(start, start + n, dtype=np.int32)
+            i += n
+        caches = {
+            "slot_ids": jnp.asarray(sid),
+            "positions": jnp.asarray(pos),
+            "block_tables": cache.device_tables(cache.active_max_blocks(),
+                                                null_rows=1),
+            "segments": cache.pools,
+        }
+        logits, new_caches = self._mixed_jit(params, caches, jnp.asarray(tok[None]))
+        cache.update_pools(new_caches)
+        return logits
+
+    def _unstick(self, sched, cache, batcher, metrics):
+        """No decode token and no chunk could be scheduled: every block is
+        pinned by half-prefilled sequences. Evict the youngest block-holding
+        sequence so the head of the line can make progress; a lone sequence
+        that still cannot fit means the prompt exceeds the pool."""
+        holders = self._block_holders(cache, batcher)
+        assert holders, "stuck with no block holders"
+        if batcher.num_active == 1:
+            raise CacheOOM(f"sequence {holders[0].req_id} alone exceeds "
+                           "the pool")
+        self._evict(Scheduler.pick_victim(holders), sched, cache, batcher,
+                    metrics)
 
     # ------------------------------------------------ drain-batch (legacy)
 

@@ -117,6 +117,43 @@ class PagedKVCache:
         self._tables[slot, : len(blocks)] = blocks
         return st
 
+    def open_slot(self, slot: int) -> SlotState:
+        """Claim a slot with no blocks yet (chunked prefill grows it via
+        ``extend_slot`` one chunk at a time instead of reserving the whole
+        prompt up front)."""
+        assert self.slots[slot] is None, f"slot {slot} busy"
+        st = SlotState(blocks=[], num_tokens=0)
+        self.slots[slot] = st
+        self._tables[slot, :] = NULL_BLOCK
+        return st
+
+    def extend_slot(self, slot: int, n: int, *, clip: bool = False) -> int:
+        """Reserve room for ``n`` more tokens (a prefill chunk), allocating
+        blocks on demand. With ``clip=True`` the chunk shrinks to whatever
+        the free list can cover right now (possibly 0) instead of raising —
+        the mixed-iteration scheduler retries the remainder next iteration.
+        Returns the number of tokens actually reserved."""
+        st = self.slots[slot]
+        assert st is not None, slot
+        if st.num_tokens + n > self.max_len:
+            raise CacheOOM(f"slot {slot}: {st.num_tokens + n} tokens exceed "
+                           f"max_len {self.max_len}")
+        cap = (len(st.blocks) * self.block_size - st.num_tokens
+               + self.allocator.free_count * self.block_size)
+        if n > cap:
+            if not clip:
+                raise CacheOOM(f"need room for {n} tokens, {cap} available")
+            n = max(0, cap)
+        if n == 0:
+            return 0
+        need = self.blocks_needed(st.num_tokens + n) - len(st.blocks)
+        if need > 0:
+            fresh = self.allocator.alloc(need)
+            self._tables[slot, len(st.blocks): len(st.blocks) + need] = fresh
+            st.blocks.extend(fresh)
+        st.num_tokens += n
+        return n
+
     def append_token(self, slot: int) -> None:
         """Reserve room for one more token; grabs a fresh block on boundary."""
         st = self.slots[slot]
@@ -142,11 +179,17 @@ class PagedKVCache:
 
     # ------------------------------------------------------------ device
 
-    def device_tables(self, max_blocks: Optional[int] = None) -> jax.Array:
+    def device_tables(self, max_blocks: Optional[int] = None, *,
+                      null_rows: int = 0) -> jax.Array:
         """Block tables, optionally truncated to ``max_blocks`` columns —
         attention cost then scales with the longest *live* context instead
-        of ``max_len`` (the whole point of paging)."""
+        of ``max_len`` (the whole point of paging). ``null_rows`` appends
+        rows of null blocks: the mixed-iteration path points pad tokens at
+        such a row so their reads/writes never touch a live sequence."""
         t = self._tables if max_blocks is None else self._tables[:, :max_blocks]
+        if null_rows:
+            t = np.concatenate(
+                [t, np.full((null_rows, t.shape[1]), NULL_BLOCK, np.int32)])
         return jnp.asarray(t)
 
     def device_positions(self) -> jax.Array:

@@ -1,4 +1,6 @@
-"""Serving metrics: tokens/s, time-to-first-token, KV-cache occupancy.
+"""Serving metrics: tokens/s, time-to-first-token (broken into queue /
+prefill / first-decode), KV-cache occupancy, and per-iteration token-budget
+accounting for mixed prefill/decode iterations.
 
 Collected host-side by the engine loop (one sample per scheduler iteration)
 — cheap enough to stay on for production traffic.
@@ -7,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 
 def _pct(xs: List[float], q: float) -> float:
@@ -18,10 +20,16 @@ def _pct(xs: List[float], q: float) -> float:
     return s[i]
 
 
+def _mean(xs: List[float]) -> float:
+    return sum(xs) / len(xs) if xs else 0.0
+
+
 @dataclasses.dataclass
 class RequestTrace:
     submit_t: float
-    first_token_t: Optional[float] = None
+    admit_t: Optional[float] = None        # seated in a batch slot
+    prefill_end_t: Optional[float] = None  # last prompt chunk dispatched
+    first_token_t: Optional[float] = None  # first generated token sampled
     finish_t: Optional[float] = None
     new_tokens: int = 0
     preemptions: int = 0
@@ -31,6 +39,25 @@ class RequestTrace:
         if self.first_token_t is None:
             return None
         return self.first_token_t - self.submit_t
+
+    @property
+    def ttft_parts(self) -> Optional[Tuple[float, float, float]]:
+        """(queue, prefill, first_decode) seconds — the TTFT decomposition.
+        queue: submit -> admission into a slot; prefill: admission -> last
+        prompt chunk through the forward; first_decode: chunk completion ->
+        first token sampled. In today's synchronous engines the first token
+        is argmaxed from the prefill dispatch itself, so first_decode is
+        ~0 by construction — it becomes meaningful once sampling moves off
+        the host loop (async/batched samplers, ROADMAP). Components describe
+        the *successful* admission (``on_admit``/``on_prefill_end`` stop
+        updating once the first token exists, so a preempted-then-recomputed
+        request reports the attempt that actually delivered)."""
+        if (self.first_token_t is None or self.admit_t is None
+                or self.prefill_end_t is None):
+            return None
+        return (self.admit_t - self.submit_t,
+                self.prefill_end_t - self.admit_t,
+                self.first_token_t - self.prefill_end_t)
 
 
 class ServingMetrics:
@@ -43,6 +70,9 @@ class ServingMetrics:
         self.prefill_tokens = 0
         self.preemptions = 0
         self.occupancy_samples: List[float] = []
+        # one (decode_tokens, prefill_tokens) pair per mixed iteration —
+        # the token-budget audit trail for the chunked-prefill engine
+        self.iteration_log: List[Tuple[int, int]] = []
         self._start: Optional[float] = None
         self._end: Optional[float] = None
 
@@ -55,15 +85,48 @@ class ServingMetrics:
             self._start = t
         self.traces[req_id] = RequestTrace(submit_t=t)
 
-    def on_first_token(self, req_id: int, prompt_len: int) -> None:
+    def on_admit(self, req_id: int) -> None:
+        """Request seated in a batch slot (prefill may start)."""
         tr = self.traces[req_id]
         if tr.first_token_t is None:
-            tr.first_token_t = self.now()
+            tr.admit_t = self.now()
+
+    def on_prefill_chunk(self, num_tokens: int) -> None:
+        """A prefill chunk of ``num_tokens`` rode this iteration's budget."""
+        self.prefill_tokens += num_tokens
+
+    def on_prefill_end(self, req_id: int) -> None:
+        """The request's final prompt chunk went through the forward."""
+        tr = self.traces[req_id]
+        if tr.first_token_t is None:
+            tr.prefill_end_t = self.now()
+
+    def on_first_token(self, req_id: int, prefill_tokens: int = 0) -> None:
+        """First generated token sampled. ``prefill_tokens``: prompt tokens
+        prefilled in one shot (the non-chunked paths); chunked prefill
+        reports per-chunk via ``on_prefill_chunk`` and passes 0."""
+        tr = self.traces[req_id]
+        t = self.now()
+        if tr.first_token_t is None:
+            if tr.admit_t is None:        # callers that skip on_admit
+                tr.admit_t = tr.submit_t
+            if tr.prefill_end_t is None:
+                tr.prefill_end_t = t
+            tr.first_token_t = t
         tr.new_tokens += 1
-        self.prefill_tokens += prompt_len
+        self.prefill_tokens += prefill_tokens
 
     def on_decode_step(self, new_tokens: int, occupancy: float) -> None:
         self.decode_steps += 1
+        self.occupancy_samples.append(occupancy)
+
+    def on_mixed_step(self, decode_tokens: int, prefill_tokens: int,
+                      occupancy: float) -> None:
+        """One mixed prefill/decode iteration: ``decode_tokens`` sequences
+        advanced a token and ``prefill_tokens`` prompt tokens rode along."""
+        self.iteration_log.append((decode_tokens, prefill_tokens))
+        if decode_tokens:
+            self.decode_steps += 1
         self.occupancy_samples.append(occupancy)
 
     def on_token(self, req_id: int) -> None:
@@ -85,6 +148,8 @@ class ServingMetrics:
 
     def summary(self) -> Dict[str, float]:
         ttfts = [t.ttft for t in self.traces.values() if t.ttft is not None]
+        parts = [t.ttft_parts for t in self.traces.values()
+                 if t.ttft_parts is not None]
         gen = sum(t.new_tokens for t in self.traces.values())
         wall = ((self._end or self.now()) - (self._start or self.now())) or 1e-9
         occ = self.occupancy_samples
@@ -93,10 +158,14 @@ class ServingMetrics:
             "generated_tokens": gen,
             "tokens_per_s": gen / wall,
             "wall_s": wall,
-            "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            "ttft_mean_s": _mean(ttfts),
             "ttft_p90_s": _pct(ttfts, 0.9),
+            "ttft_queue_mean_s": _mean([p[0] for p in parts]),
+            "ttft_prefill_mean_s": _mean([p[1] for p in parts]),
+            "ttft_first_decode_mean_s": _mean([p[2] for p in parts]),
             "decode_steps": self.decode_steps,
+            "mixed_iterations": len(self.iteration_log),
             "preemptions": self.preemptions,
-            "cache_occupancy_mean": sum(occ) / len(occ) if occ else 0.0,
+            "cache_occupancy_mean": _mean(occ),
             "cache_occupancy_peak": max(occ) if occ else 0.0,
         }

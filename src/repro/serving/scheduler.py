@@ -12,6 +12,27 @@ Preemption: when the paged cache cannot cover the next token for every
 running sequence, the scheduler picks victims youngest-first (latest
 admission), frees their blocks, and re-queues them at the FRONT of their row
 queue for recompute — greedy decode makes the recomputed tokens identical.
+A victim may be *mid-prefill* (chunked-prefill engine): its partial chunk
+progress is discarded along with its blocks and it restarts from scratch.
+
+Sequence state machine (chunked-prefill engine)::
+
+    waiting --admit--> prefilling --last chunk--> decoding --max_new--> done
+       ^                   |                         |
+       +----- preempt -----+------------ preempt ----+
+
+``waiting``: queued in its budget row, holds no slot and no blocks.
+``prefilling``: seated in a batch slot; each mixed iteration may push one
+chunk of up to ``prefill_chunk`` prompt tokens through the forward, under
+the iteration's token budget (decode tokens are reserved first, so a long
+prefill can never starve running decodes). ``decoding``: one token per
+iteration. Preemption from either seated state frees the blocks and
+re-queues at the row front (recompute). The drain/PR-1 continuous paths
+collapse prefilling into a single admission-time forward.
+
+``Scheduler.plan_prefill_chunks`` is the per-iteration budget accounting:
+FIFO over seated prefilling sequences, each clipped to the chunk knob, the
+remaining prompt, and the remaining budget.
 """
 from __future__ import annotations
 
@@ -45,6 +66,8 @@ class Sequence:
     row: int
     generated: List[int] = dataclasses.field(default_factory=list)
     admissions: int = 0          # >1 after preemption
+    state: str = "waiting"       # waiting | prefilling | decoding
+    prefill_pos: int = 0         # prompt tokens already pushed through
 
     @property
     def prompt_len(self) -> int:
@@ -54,8 +77,14 @@ class Sequence:
     def done(self) -> bool:
         return len(self.generated) >= self.request.max_new_tokens
 
+    @property
+    def prefill_remaining(self) -> int:
+        return self.prompt_len - self.prefill_pos
+
     def reset_for_recompute(self) -> None:
         self.generated.clear()
+        self.prefill_pos = 0
+        self.state = "waiting"
 
 
 class BudgetRouter:
@@ -119,5 +148,32 @@ class Scheduler:
 
     @staticmethod
     def pick_victim(active: List[Sequence]) -> Sequence:
-        """Youngest-first preemption: least sunk work is thrown away."""
+        """Youngest-first preemption: least sunk work is thrown away. The
+        victim pool spans both decoding and mid-prefill sequences — a
+        half-prefilled youngster is evicted before any older sequence."""
         return max(active, key=lambda s: s.req_id)
+
+    @staticmethod
+    def plan_prefill_chunks(prefilling: List[Sequence], budget: int,
+                            chunk: int) -> List[tuple]:
+        """Per-iteration prefill budget accounting.
+
+        ``prefilling``: seated sequences in admission (FIFO) order;
+        ``budget``: tokens left this iteration after the decode batch took
+        one slot each; ``chunk``: the prefill-chunk knob. Returns
+        ``[(seq, n), ...]`` with every ``n >= 1``, each clipped to
+        ``min(chunk, seq.prefill_remaining, budget_left)``. Earlier
+        sequences are budgeted first, so within a budget row prompts finish
+        prefilling in admission order. Cache-capacity clipping happens in
+        the engine (it may shrink ``n`` further when the free list is low).
+        """
+        plan = []
+        for seq in prefilling:
+            if budget <= 0:
+                break
+            n = min(chunk, seq.prefill_remaining, budget)
+            if n <= 0:
+                continue
+            plan.append((seq, n))
+            budget -= n
+        return plan

@@ -1,0 +1,429 @@
+"""Hardening suite for the chunked-prefill serving stack.
+
+Covers the mixed prefill/decode iteration engine end to end:
+
+  * token-identity matrix — chunked output must be bit-identical to the
+    drain baseline AND the PR-1 continuous engine across chunk sizes
+    {1, block_size-1, block_size, 64} (plus an optional env-injected size),
+    prompt lengths straddling block boundaries, and mid-prefill preemption;
+  * property-based allocator suite — hypothesis stateful machine (plus an
+    always-on seeded random walk) over ``BlockAllocator``/``PagedKVCache``:
+    no double-free, no leaked blocks, consistent ``free_count``/tables;
+  * scheduler invariants — per-iteration token-budget accounting, FIFO
+    prefill order within a budget row, youngest-first victims that may be
+    mid-prefill, and no decode starvation under a long prefill.
+
+``REPRO_PREFILL_CHUNK`` (CI matrix knob) injects one extra chunk size into
+every parametrized sweep so mixed-iteration regressions surface on more
+than the hardcoded configurations.
+"""
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.serving import (BlockAllocator, CacheOOM, ElasticEngine,
+                           PagedKVCache, Request, Scheduler)
+from repro.serving.scheduler import BudgetRouter, Sequence
+
+try:
+    from hypothesis import settings
+    from hypothesis import strategies as st
+    from hypothesis.stateful import RuleBasedStateMachine, invariant, rule
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dev dependency: property tests skip cleanly
+    HAVE_HYPOTHESIS = False
+
+BLOCK = 8
+CHUNK_SIZES = [1, BLOCK - 1, BLOCK, 64]
+_env_chunk = os.environ.get("REPRO_PREFILL_CHUNK")
+if _env_chunk and int(_env_chunk) not in CHUNK_SIZES:
+    CHUNK_SIZES.append(int(_env_chunk))
+
+# prompt lengths straddle the block-size-8 boundaries (7/8/9) and a
+# multi-block prompt straddling the second boundary (17), plus max_new edge
+# cases (1 and multi-block growth)
+IDENTITY_SPEC = [(7, 4, 1.0), (8, 3, 0.4), (9, 5, 1.0), (17, 2, 0.7),
+                 (4, 1, 1.0), (12, 9, 0.4)]
+
+
+@pytest.fixture(scope="module")
+def smoke_state():
+    from repro.data import make_source
+    from repro.launch.train import build_flexrank_state
+    from repro.models import common as cm
+    from repro.models import transformer as tfm
+    cfg = get_config("gpt2-small", smoke=True)
+    source = make_source(cfg.vocab_size, 64, 4, seed=0)
+    dense = cm.instantiate(tfm.model_spec(cfg), jax.random.PRNGKey(0))
+    params_fact, table, infos = build_flexrank_state(cfg, dense, source)
+    return cfg, params_fact, table, infos
+
+
+def _mk_engine(state, **kw):
+    cfg, params_fact, table, infos = state
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("block_size", BLOCK)
+    return ElasticEngine(cfg, params_fact, table, infos, **kw)
+
+
+def _requests(cfg, spec, seed=7):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, pl).astype(np.int32),
+                    max_new_tokens=mn, budget=b) for pl, mn, b in spec]
+
+
+@pytest.fixture(scope="module")
+def identity_baselines(smoke_state):
+    """Drain (seed greedy, batch-1) and PR-1 continuous tokens for the
+    identity matrix, computed once."""
+    cfg = smoke_state[0]
+    reqs = _requests(cfg, IDENTITY_SPEC)
+    eng = _mk_engine(smoke_state)
+    drain = [eng.generate_drain([r])[0].tokens for r in reqs]
+    continuous = [r.tokens for r in eng.generate(reqs, mode="continuous")]
+    for a, b in zip(drain, continuous):          # PR-1 invariant still holds
+        np.testing.assert_array_equal(a, b)
+    return reqs, drain
+
+
+# ------------------------------------------------- token-identity matrix
+
+@pytest.mark.parametrize("chunk", CHUNK_SIZES)
+def test_token_identity_matrix(smoke_state, identity_baselines, chunk):
+    """Chunked prefill must be token-identical to the drain baseline and the
+    PR-1 continuous engine for every chunk size, with prompts straddling
+    block boundaries and mid-flight joins (6 requests, 2 slots)."""
+    reqs, drain = identity_baselines
+    eng = _mk_engine(smoke_state, prefill_chunk=chunk)
+    res = eng.generate(reqs, mode="continuous")
+    for i, rq in enumerate(reqs):
+        assert len(res[i].tokens) == len(rq.prompt) + rq.max_new_tokens
+        np.testing.assert_array_equal(res[i].tokens, drain[i])
+    m = eng.last_metrics.summary()
+    assert m["mixed_iterations"] > 0
+    assert m["generated_tokens"] == sum(mn for _, mn, _ in IDENTITY_SPEC)
+
+
+@pytest.mark.parametrize(
+    "chunk", [4] + ([int(_env_chunk)] if _env_chunk and _env_chunk != "4" else []))
+def test_token_identity_under_mid_prefill_preemption(smoke_state, chunk):
+    """Pool of 5 blocks, two 12-token prompts (3 blocks each + decode
+    growth): the younger sequence is evicted *mid-prefill*, recomputed, and
+    still yields exact tokens."""
+    eng = _mk_engine(smoke_state, max_len=32, block_size=4, num_blocks=5,
+                     prefill_chunk=chunk)
+    cfg = eng.cfg
+    reqs = _requests(cfg, [(12, 6, 1.0), (12, 6, 1.0)])
+    res = eng.generate(reqs, mode="continuous")
+    m = eng.last_metrics
+    assert m.preemptions >= 1
+    # the victim is the younger request, evicted before its first token
+    assert m.traces[1].preemptions >= 1
+    for i, rq in enumerate(reqs):
+        np.testing.assert_array_equal(res[i].tokens,
+                                      eng.generate_drain([rq])[0].tokens)
+
+
+def test_preemption_victim_pool_excludes_zero_block_seats(smoke_state):
+    """A freshly (re-)seated mid-prefill sequence can hold zero blocks when
+    the free list is empty; evicting it frees nothing and just inflates the
+    preemption counters, so the engine's victim pool must be restricted to
+    block holders."""
+    from repro.serving.batcher import ContinuousBatcher
+    eng = _mk_engine(smoke_state, prefill_chunk=4)
+    cache = PagedKVCache(eng.cfg, max_batch=2, max_len=16, block_size=4)
+    batcher = ContinuousBatcher(2)
+    holder = _seq(0, 8)
+    empty = _seq(1, 8)                            # younger, but blockless
+    cache.open_slot(0)
+    cache.extend_slot(0, 4)
+    batcher.seat_prefill(0, holder)
+    cache.open_slot(1)                            # seated with no blocks yet
+    batcher.seat_prefill(1, empty)
+    assert eng._block_holders(cache, batcher) == [holder]
+    assert Scheduler.pick_victim(eng._block_holders(cache, batcher)) is holder
+
+
+def test_preemption_churn_pool_exactly_full(smoke_state):
+    """One sequence grows to exactly the whole pool while a second prompt
+    churns through preempted seats: both must complete token-identically
+    (no spurious OOM, no lost chunks)."""
+    eng = _mk_engine(smoke_state, max_len=32, block_size=4, num_blocks=5,
+                     prefill_chunk=4)
+    cfg = eng.cfg
+    reqs = _requests(cfg, [(4, 13, 1.0), (12, 1, 1.0)])
+    res = eng.generate(reqs, mode="continuous")   # must complete, no OOM
+    for i, rq in enumerate(reqs):
+        np.testing.assert_array_equal(res[i].tokens,
+                                      eng.generate_drain([rq])[0].tokens)
+
+
+def test_chunked_pallas_matches_oracle_engine(smoke_state):
+    eng_ref = _mk_engine(smoke_state, max_len=32, block_size=4, prefill_chunk=3)
+    eng_ker = _mk_engine(smoke_state, max_len=32, block_size=4, prefill_chunk=3,
+                         use_pallas="interpret")
+    reqs = _requests(eng_ref.cfg, [(5, 4, 1.0), (9, 5, 1.0)])
+    r1 = eng_ref.generate(reqs, mode="continuous")
+    r2 = eng_ker.generate(reqs, mode="continuous")
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_chunked_engine_oom_and_knob_validation(smoke_state):
+    eng = _mk_engine(smoke_state, max_batch=1, max_len=32, block_size=4,
+                     num_blocks=2, prefill_chunk=4)
+    (rq,) = _requests(eng.cfg, [(20, 2, 1.0)])   # prompt needs 5 blocks
+    with pytest.raises(CacheOOM):
+        eng.generate([rq], mode="continuous")
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        _mk_engine(smoke_state, prefill_chunk=0)
+    with pytest.raises(ValueError, match="token_budget"):
+        _mk_engine(smoke_state, max_batch=4, prefill_chunk=8, token_budget=4)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        _mk_engine(smoke_state, token_budget=16)   # budget without chunking
+
+
+def test_ttft_breakdown_recorded(smoke_state):
+    eng = _mk_engine(smoke_state, prefill_chunk=8)
+    reqs = _requests(eng.cfg, [(9, 3, 1.0), (7, 2, 1.0)])
+    eng.generate(reqs, mode="continuous")
+    m = eng.last_metrics.summary()
+    for tr in eng.last_metrics.traces.values():
+        q, p, fd = tr.ttft_parts
+        assert q >= 0 and p >= 0 and fd >= 0
+        assert abs((q + p + fd) - tr.ttft) < 1e-9
+    assert m["ttft_mean_s"] > 0
+    assert m["ttft_prefill_mean_s"] >= 0
+
+
+# ------------------------------------------------- scheduler invariants
+
+def _seq(req_id, plen, max_new=4, prefill_pos=0, state="prefilling"):
+    s = Sequence(req_id=req_id, row=0,
+                 request=Request(prompt=np.zeros(plen, np.int32),
+                                 max_new_tokens=max_new))
+    s.prefill_pos = prefill_pos
+    s.state = state
+    return s
+
+
+def test_plan_prefill_chunks_budget_and_fifo():
+    a, b, c = _seq(0, 20), _seq(1, 20), _seq(2, 20)
+    plan = Scheduler.plan_prefill_chunks([a, b, c], budget=10, chunk=8)
+    assert plan == [(a, 8), (b, 2)]              # FIFO, budget-exact
+    assert sum(n for _, n in plan) <= 10
+    # chunk knob caps each sequence even with budget to spare
+    plan = Scheduler.plan_prefill_chunks([a], budget=100, chunk=8)
+    assert plan == [(a, 8)]
+    # remaining prompt caps the chunk
+    a.prefill_pos = 17
+    plan = Scheduler.plan_prefill_chunks([a, b], budget=100, chunk=8)
+    assert plan == [(a, 3), (b, 8)]
+    # zero budget -> nothing scheduled
+    assert Scheduler.plan_prefill_chunks([a, b], budget=0, chunk=8) == []
+
+
+def test_plan_prefill_chunks_env_matrix_chunk():
+    """The CI chunk-size matrix must exercise the planner at the env-provided
+    chunk too."""
+    for chunk in CHUNK_SIZES:
+        seqs = [_seq(i, 3 * chunk + 1) for i in range(3)]
+        plan = Scheduler.plan_prefill_chunks(seqs, budget=2 * chunk, chunk=chunk)
+        assert sum(n for _, n in plan) <= 2 * chunk
+        assert all(n <= chunk for _, n in plan)
+        assert [s.req_id for s, _ in plan] == sorted(s.req_id for s, _ in plan)
+
+
+def test_pick_victim_youngest_first_includes_mid_prefill():
+    old_decode = _seq(3, 8, state="decoding")
+    young_prefill = _seq(7, 8, state="prefilling", prefill_pos=5)
+    assert Scheduler.pick_victim([old_decode, young_prefill]) is young_prefill
+    # and among decoding-only, still youngest
+    other = _seq(5, 8, state="decoding")
+    assert Scheduler.pick_victim([old_decode, other]) is other
+
+
+def test_requeue_resets_prefill_progress():
+    sched = Scheduler(BudgetRouter(np.asarray([50, 100])))
+    s = sched.submit(Request(prompt=np.zeros(16, np.int32), budget=1.0))
+    s.state, s.prefill_pos = "prefilling", 9
+    s.generated.extend([1, 2])
+    sched.requeue_front(s)
+    assert s.prefill_pos == 0 and s.generated == [] and s.state == "waiting"
+    assert sched.pop(s.row) is s
+
+
+def test_iteration_budget_accounting_and_mixing(smoke_state):
+    """Every mixed iteration stays within the token budget, decode tokens
+    are never starved by a long prefill, and at least one iteration truly
+    mixes prefill chunks with running decodes."""
+    budget = 2 + 6                                # max_batch + chunk
+    eng = _mk_engine(smoke_state, prefill_chunk=6, token_budget=budget)
+    # short prompt decodes for a long time while a 40-token prompt prefills
+    reqs = _requests(eng.cfg, [(4, 16, 1.0), (40, 2, 1.0)])
+    eng.generate(reqs, mode="continuous")
+    log = eng.last_metrics.iteration_log
+    assert log, "no mixed iterations recorded"
+    assert all(d + p <= budget for d, p in log)
+    assert any(d > 0 and p > 0 for d, p in log), "prefill never fused with decode"
+    # decode priority: while the long prompt chunks through (p > 0), the
+    # short sequence keeps decoding — no stop-the-world prefill
+    mixing = [d for d, p in log if p > 0]
+    assert mixing and all(d >= 1 for d in mixing[1:]), log
+
+
+def test_prefill_completes_fifo_within_row(smoke_state):
+    """Within a budget row the head of the line is budgeted first, so
+    equal-length prompts finish prefilling in admission order (leftover
+    budget may legitimately let a *shorter* later prompt finish early —
+    FIFO is about scheduling priority, not completion)."""
+    eng = _mk_engine(smoke_state, max_batch=3, prefill_chunk=8)
+    reqs = _requests(eng.cfg, [(24, 2, 1.0), (24, 2, 1.0), (24, 2, 1.0)])
+    eng.generate(reqs, mode="continuous")
+    tr = eng.last_metrics.traces
+    assert tr[0].prefill_end_t <= tr[1].prefill_end_t <= tr[2].prefill_end_t
+    assert (tr[0].first_token_t <= tr[1].first_token_t
+            <= tr[2].first_token_t)
+
+
+# --------------------------------------- property-based allocator suite
+
+CFG_TINY = get_config("gpt2-small", smoke=True)
+CACHE_KW = dict(max_batch=3, max_len=16, block_size=2, num_blocks=8)
+
+
+def _check_cache_invariants(cache: PagedKVCache):
+    alloc = cache.allocator
+    held = [b for s in cache.slots if s is not None for b in s.blocks]
+    # never leak, never double-allocate, never hand out the null block
+    assert len(held) == len(set(held))
+    assert 0 not in held
+    assert alloc.free_count + len(held) == alloc.num_blocks - 1
+    for slot, s in enumerate(cache.slots):
+        tbl = cache._tables[slot]
+        if s is None:
+            assert not tbl.any()
+            continue
+        assert s.num_tokens <= len(s.blocks) * cache.block_size
+        assert list(tbl[: len(s.blocks)]) == s.blocks
+        assert not tbl[len(s.blocks):].any()
+
+
+def _random_cache_walk(seed, steps=300):
+    rng = np.random.default_rng(seed)
+    cache = PagedKVCache(CFG_TINY, **CACHE_KW)
+    for _ in range(steps):
+        op = rng.integers(0, 4)
+        slot = int(rng.integers(0, CACHE_KW["max_batch"]))
+        try:
+            if op == 0 and cache.slots[slot] is None:
+                if rng.integers(0, 2):
+                    cache.allocate_slot(slot, int(rng.integers(1, 12)))
+                else:
+                    cache.open_slot(slot)
+            elif op == 1 and cache.slots[slot] is not None:
+                cache.extend_slot(slot, int(rng.integers(1, 7)),
+                                  clip=bool(rng.integers(0, 2)))
+            elif op == 2 and cache.slots[slot] is not None:
+                cache.append_token(slot)
+            elif op == 3 and cache.slots[slot] is not None:
+                cache.free_slot(slot)           # preemption == free + requeue
+        except CacheOOM:
+            pass                                # OOM is a legal outcome
+        _check_cache_invariants(cache)
+    for slot in range(CACHE_KW["max_batch"]):   # drain: everything returns
+        if cache.slots[slot] is not None:
+            cache.free_slot(slot)
+    assert cache.allocator.free_count == cache.allocator.num_blocks - 1
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_cache_random_interleavings_conserve_blocks(seed):
+    """Seeded random alloc/extend/append/free walk (always runs, with or
+    without hypothesis): blocks are conserved, tables stay consistent."""
+    _random_cache_walk(seed)
+
+
+def test_allocator_exact_exhaustion_and_lifo_reuse():
+    a = BlockAllocator(6)                        # 5 usable
+    xs = a.alloc(5)
+    assert a.free_count == 0
+    with pytest.raises(CacheOOM):
+        a.alloc(1)
+    a.free(xs[2:])
+    assert a.free_count == 3
+    assert a.alloc(1) == [xs[-1]]                # LIFO: last freed, first out
+    with pytest.raises(AssertionError):
+        a.free([xs[0], xs[0]])                   # double free within one call
+
+
+if HAVE_HYPOTHESIS:
+
+    class CacheMachine(RuleBasedStateMachine):
+        """Stateful property test: arbitrary interleavings of slot claims,
+        chunked growth, decode appends, and frees/preemptions keep the
+        allocator and block tables consistent."""
+
+        def __init__(self):
+            super().__init__()
+            self.cache = PagedKVCache(CFG_TINY, **CACHE_KW)
+
+        slots = st.integers(0, CACHE_KW["max_batch"] - 1)
+
+        @rule(slot=slots, n=st.integers(1, 12))
+        def allocate(self, slot, n):
+            if self.cache.slots[slot] is None:
+                if self.cache.can_allocate(n):
+                    self.cache.allocate_slot(slot, n)
+                else:
+                    with pytest.raises(CacheOOM):
+                        self.cache.allocate_slot(slot, n)
+
+        @rule(slot=slots)
+        def open_empty(self, slot):
+            if self.cache.slots[slot] is None:
+                self.cache.open_slot(slot)
+
+        @rule(slot=slots, n=st.integers(1, 7), clip=st.booleans())
+        def extend(self, slot, n, clip):
+            st_ = self.cache.slots[slot]
+            if st_ is None or st_.num_tokens + n > self.cache.max_len:
+                return
+            if clip:
+                got = self.cache.extend_slot(slot, n, clip=True)
+                assert 0 <= got <= n
+            else:
+                try:
+                    assert self.cache.extend_slot(slot, n) == n
+                except CacheOOM:
+                    pass
+
+        @rule(slot=slots)
+        def append(self, slot):
+            if self.cache.slots[slot] is not None:
+                try:
+                    self.cache.append_token(slot)
+                except CacheOOM:
+                    pass
+
+        @rule(slot=slots)
+        def free(self, slot):
+            if self.cache.slots[slot] is not None:
+                self.cache.free_slot(slot)
+
+        @invariant()
+        def consistent(self):
+            _check_cache_invariants(self.cache)
+
+    CacheMachine.TestCase.settings = settings(
+        max_examples=25, stateful_step_count=40, deadline=None)
+    TestCacheMachine = CacheMachine.TestCase
+
+else:
+
+    def test_cache_machine_requires_hypothesis():
+        pytest.skip("hypothesis not installed (optional dev extra)")

@@ -1,4 +1,6 @@
 """Per-kernel shape/dtype sweeps: pallas (interpret=True) vs ref.py oracle."""
+import os
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -75,6 +77,110 @@ def test_lowrank_mask_traced_rank():
             np.asarray(f(jnp.asarray(rk))),
             np.asarray(ops.lowrank_forward(x, v, u, rk, use_pallas=False)),
             rtol=1e-3, atol=1e-3)
+
+
+# -------------------------------------------------------- paged attention
+
+# head counts, head dims, and block sizes deliberately include values that
+# are NOT multiples of the TPU (8, 128) tile — interpret mode must stay
+# exact there so the ops.py padding contract is the only tiling assumption.
+# REPRO_PREFILL_CHUNK (the CI chunk matrix knob) adds one more block size.
+PAGED_GEOMS = [
+    # (hq, hkv, d,  bs, mb)
+    (4, 4, 16, 4, 3),          # MHA, tile-aligned head dim
+    (8, 2, 32, 8, 4),          # GQA 4:1
+    (5, 5, 24, 3, 4),          # head count/dim off the (8, 128) tile
+    (6, 3, 20, 5, 2),          # GQA with odd block size
+    (2, 1, 8, 16, 2),          # tiny MQA, wide blocks
+    (12, 4, 40, 7, 3),         # GQA 3:1, non-multiple everything
+]
+_env_bs = os.environ.get("REPRO_PREFILL_CHUNK")
+if _env_bs:
+    PAGED_GEOMS.append((4, 2, 16, max(1, int(_env_bs) % 32), 3))
+
+
+def _paged_pools(b, hkv, d, bs, mb, dtype):
+    nb = b * mb + 1
+    kp = jnp.asarray(RNG.standard_normal((nb, bs, hkv, d)), dtype)
+    vp = jnp.asarray(RNG.standard_normal((nb, bs, hkv, d)), dtype)
+    tables = 1 + RNG.permutation(b * mb).reshape(b, mb).astype(np.int32)
+    return kp, vp, jnp.asarray(tables)
+
+
+@pytest.mark.parametrize("hq,hkv,d,bs,mb", PAGED_GEOMS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_kernel_parity_sweep(hq, hkv, d, bs, mb, dtype):
+    b = 3
+    kp, vp, tables = _paged_pools(b, hkv, d, bs, mb, dtype)
+    q = jnp.asarray(RNG.standard_normal((b, hq, d)), dtype)
+    lens = jnp.asarray(RNG.integers(1, mb * bs + 1, size=b).astype(np.int32))
+    y_ref = ops.paged_attention_forward(q, kp, vp, tables, lens,
+                                        use_pallas=False)
+    y_ker = ops.paged_attention_forward(q, kp, vp, tables, lens,
+                                        use_pallas="interpret")
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    err = float(jnp.abs(y_ref.astype(jnp.float32)
+                        - y_ker.astype(jnp.float32)).max())
+    assert err < tol, (err, (hq, hkv, d, bs, mb))
+
+
+@pytest.mark.parametrize("hq,hkv,d,bs,mb", PAGED_GEOMS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_prefill_kernel_parity_sweep(hq, hkv, d, bs, mb, dtype):
+    """Chunked-prefill variant: flat token batch mixing chunk runs and
+    decode singletons across slots, per-token contexts."""
+    b, t = 3, 10
+    kp, vp, tables = _paged_pools(b, hkv, d, bs, mb, dtype)
+    q = jnp.asarray(RNG.standard_normal((t, hq, d)), dtype)
+    sid = jnp.asarray(RNG.integers(0, b, size=t).astype(np.int32))
+    lens = jnp.asarray(RNG.integers(1, mb * bs + 1, size=t).astype(np.int32))
+    y_ref = ops.paged_prefill_attention_forward(q, kp, vp, tables, sid, lens,
+                                                use_pallas=False)
+    y_ker = ops.paged_prefill_attention_forward(q, kp, vp, tables, sid, lens,
+                                                use_pallas="interpret")
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    err = float(jnp.abs(y_ref.astype(jnp.float32)
+                        - y_ker.astype(jnp.float32)).max())
+    assert err < tol, (err, (hq, hkv, d, bs, mb))
+
+
+def test_paged_prefill_reduces_to_decode_and_respects_window():
+    """slot_ids == arange(B) makes the prefill oracle the decode oracle;
+    sliding-window masking matches between the two."""
+    b, hq, hkv, d, bs, mb = 2, 8, 4, 16, 4, 4
+    kp, vp, tables = _paged_pools(b, hkv, d, bs, mb, jnp.float32)
+    q = jnp.asarray(RNG.standard_normal((b, hq, d)).astype(np.float32))
+    lens = jnp.asarray(np.asarray([7, 13], np.int32))
+    sid = jnp.arange(b, dtype=jnp.int32)
+    for window in (None, 5):
+        y_dec = ops.paged_attention_forward(q, kp, vp, tables, lens,
+                                            window=window, use_pallas=False)
+        y_pre = ops.paged_prefill_attention_forward(q, kp, vp, tables, sid,
+                                                    lens, window=window,
+                                                    use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(y_dec), np.asarray(y_pre))
+
+
+def test_paged_prefill_intra_chunk_causality():
+    """A chunk's tokens see strictly growing contexts: writing garbage past
+    each token's context must not change its output (causality within the
+    chunk is enforced purely by per-token context lengths)."""
+    b, hq, hkv, d, bs, mb = 1, 4, 2, 16, 4, 3
+    kp, vp, tables = _paged_pools(b, hkv, d, bs, mb, jnp.float32)
+    t = 6                                     # chunk: positions 3..8
+    q = jnp.asarray(RNG.standard_normal((t, hq, d)).astype(np.float32))
+    sid = jnp.zeros(t, jnp.int32)
+    lens = jnp.asarray(np.arange(4, 10, dtype=np.int32))   # pos + 1
+    y1 = ops.paged_prefill_attention_forward(q, kp, vp, tables, sid, lens,
+                                             use_pallas="interpret")
+    # scribble the last block (tokens 8..11) — only the final token (context
+    # 9) may see its first slot; nothing before position 8 changes
+    blk = int(np.asarray(tables)[0, 2])
+    kp2 = kp.at[blk, 1:].set(99.0)
+    vp2 = vp.at[blk, 1:].set(-99.0)
+    y2 = ops.paged_prefill_attention_forward(q, kp2, vp2, tables, sid, lens,
+                                             use_pallas="interpret")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
 
 
 # ------------------------------------------------------------------ wkv6
