@@ -20,6 +20,7 @@ MODULES = [
     ("tab1_elastic_eval", "benchmarks.elastic_eval"),
     ("roofline", "benchmarks.roofline"),
     ("serving_throughput", "benchmarks.serving_throughput"),
+    ("spec_decode", "benchmarks.spec_decode"),
 ]
 
 

@@ -1,0 +1,177 @@
+"""Nested self-speculative decoding: tokens/s sweep over (draft rank, k)
+vs the PR-2 chunked-prefill engine (the spec-decode acceptance benchmark).
+
+Model: a serving-sized dense transformer whose factorizable weights are
+rescaled to a *trained-model-like decaying spectrum* before decomposition.
+Random-init weights have flat singular spectra, which violates FlexRank's
+premise (trained weights compress well — the reason nested low-rank
+submodels exist at all); with a realistic knee, DataSVD's low-rank rows
+genuinely track the full row and acceptance becomes meaningful. Budget rows
+below ~0.6 then retain almost all spectral energy, exactly the regime where
+a cheap prefix row drafts well.
+
+Workload: the mixed stream (short and long generations over short prompts,
+one budget row) in the small-batch decode-bound regime — where speculative
+decoding pays: the full row verifies k+1 positions per sequence in ONE
+fused forward for nearly the cost of a one-token step, while the drafts run
+on the cheaper prefix row.
+
+Derived columns: per-(draft, k) tokens/s, acceptance rate, mean accepted
+length, and the speedup vs the non-speculative chunked engine; the best
+point is re-emitted (acceptance target: >= 1.3x).
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs.base import FlexRankConfig, ModelConfig, Segment
+from repro.core.flexrank import group_infos
+from repro.data import make_source
+from repro.launch.train import build_flexrank_state
+from repro.models import common as cm
+from repro.models import transformer as tfm
+from repro.serving import ElasticEngine, Request, SpecConfig
+
+BENCH_CFG = ModelConfig(
+    name="spec-bench", family="dense", num_layers=4, d_model=512,
+    num_heads=8, num_kv_heads=4, d_ff=2048, vocab_size=2048,
+    # one segment per layer: depth-heterogeneous rank profiles
+    segments=tuple(Segment("attn", 1) for _ in range(4)),
+    rope_base=10000.0,
+    # budget grid reaches low so cheap draft rows exist (deployed-cost
+    # fractions land at ~[0.36, 0.46, 0.61, 0.78, 1.0])
+    flexrank=FlexRankConfig(enabled=True,
+                            budgets=(0.25, 0.35, 0.5, 0.7, 1.0)),
+)
+
+# 0.45 resolves the cheapest prefix row (~0.36 of full), 0.6 the next one
+DRAFT_RANKS = (0.45, 0.6)
+SPEC_LENS = (2, 3, 5)
+PREFILL_CHUNK = 16
+# small-batch low-latency regime — the classic speculative-decoding win:
+# with 2 sequences, a k=3 verify (8 flat tokens) rides the SAME width
+# bucket a plain decode iteration pays for 2 tokens
+MAX_BATCH = 2
+
+
+def impose_low_rank_spectrum(dense, cfg, *, knee_frac=0.1, tail=0.02):
+    """Rescale every factorizable weight to a decaying singular spectrum:
+    full-strength head up to ``knee_frac * min(m, n)``, exponentially
+    fading tail — the spectral shape trained networks exhibit and the
+    paper's decomposition assumes."""
+    for info in group_infos(cfg):
+        leaf = cm.tree_get(dense, info.path)
+        w = np.array(leaf["w"], np.float32)
+        for idx in (np.ndindex(*info.lead_dims) if info.lead_dims else [()]):
+            u, s, vt = np.linalg.svd(w[idx], full_matrices=False)
+            r = len(s)
+            knee = max(1, int(knee_frac * r))
+            i = np.arange(r)
+            scale = np.where(i < knee, 1.0,
+                             tail + (1 - tail) * np.exp(-(i - knee)
+                                                        / (0.05 * r)))
+            w[idx] = (u * (s * scale)) @ vt
+        cm.tree_set(dense, info.path, {"w": jnp.asarray(w)})
+    return dense
+
+
+def _spec_stream(cfg, n, rng):
+    """Mixed decode-bound stream: short prompts, every fourth response runs
+    long, the rest medium — the small-batch generation-heavy regime
+    speculative decoding targets (one round of draft-cache warmup per
+    sequence amortizes over its decode)."""
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(4, 14))
+        max_new = (int(rng.integers(48, 65)) if i % 4 == 0
+                   else int(rng.integers(24, 41)))
+        prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        reqs.append(Request(prompt=prompt, max_new_tokens=max_new, budget=1.0))
+    return reqs
+
+
+REPS = 3
+
+
+def _timed(engine, reqs):
+    t0 = time.perf_counter()
+    engine.generate(reqs, mode="continuous")
+    return time.perf_counter() - t0
+
+
+def main():
+    rng = np.random.default_rng(0)
+    source = make_source(BENCH_CFG.vocab_size, 64, 4, seed=0)
+    dense = cm.instantiate(tfm.model_spec(BENCH_CFG), jax.random.PRNGKey(0))
+    dense = impose_low_rank_spectrum(dense, BENCH_CFG)
+    params_fact, table, infos = build_flexrank_state(BENCH_CFG, dense, source)
+    reqs = _spec_stream(BENCH_CFG, 8, rng)
+
+    deployed = {}                # share GAR-realized rows across engines
+
+    def mk(spec=None):
+        eng = ElasticEngine(BENCH_CFG, params_fact, table, infos,
+                            max_batch=MAX_BATCH, max_len=96, block_size=8,
+                            prefill_chunk=PREFILL_CHUNK, spec=spec)
+        eng._deployed = deployed
+        return eng
+
+    gen = sum(r.max_new_tokens for r in reqs)
+    points = [(d, k) for d in DRAFT_RANKS for k in SPEC_LENS]
+
+    # ONE spec engine reused across sweep points: the spec knob is read per
+    # generate() call, so jit caches and GAR rows carry over and the sweep
+    # times serving, not recompilation
+    base = mk()
+    eng = mk(SpecConfig(draft_rank=DRAFT_RANKS[0], spec_len=SPEC_LENS[0]))
+    base.generate(reqs, mode="continuous")            # warm traces + rows
+    for draft, k in points:
+        eng.spec = SpecConfig(draft_rank=draft, spec_len=k)
+        eng.generate(reqs, mode="continuous")
+
+    # interleaved best-of-N: the baseline rides INSIDE every sweep pass, so
+    # host-load drift hits baseline and spec alike and the min over passes
+    # compares quiet-period samples of each
+    wall_b = None
+    walls = {}
+    stats = {}
+    for _ in range(REPS):
+        w = _timed(base, reqs)
+        wall_b = w if wall_b is None or w < wall_b else wall_b
+        for draft, k in points:
+            eng.spec = SpecConfig(draft_rank=draft, spec_len=k)
+            w = _timed(eng, reqs)
+            if (draft, k) not in walls or w < walls[(draft, k)]:
+                walls[(draft, k)] = w
+            stats[(draft, k)] = eng.last_metrics.summary()
+
+    tps_b = gen / wall_b
+    emit("spec_baseline_chunked", wall_b * 1e6, f"{tps_b:.1f}")
+    best = None
+    for draft, k in points:
+        wall, s = walls[(draft, k)], stats[(draft, k)]
+        tps = gen / wall
+        speedup = tps / tps_b
+        emit(f"spec_d{draft}_k{k}", wall * 1e6,
+             f"{tps:.1f} tok/s {speedup:.2f}x "
+             f"acc={s['spec_acceptance_rate']:.2f} "
+             f"mal={s['spec_mean_accepted_len']:.2f}")
+        if best is None or speedup > best[0]:
+            best = (speedup, draft, k, s)
+
+    speedup, draft, k, s = best
+    emit("spec_best", wall_b * 1e6,
+         f"{speedup:.2f}x at draft={draft} k={k} "
+         f"(acceptance {s['spec_acceptance_rate']:.2f}, "
+         f"mean accepted len {s['spec_mean_accepted_len']:.2f}, "
+         f"{s['spec_rounds']:.0f} rounds)")
+    if speedup < 1.3:
+        print(f"# WARNING: best spec speedup {speedup:.2f}x < 1.3x "
+              "acceptance target")
+
+
+if __name__ == "__main__":
+    main()

@@ -334,6 +334,48 @@ def gar_deploy(params_fact: PyTree, cfg: ModelConfig, infos: List[GroupInfo],
     return params
 
 
+def is_nested_prefix(table: ProfileTable, draft_row: int,
+                     target_row: int) -> bool:
+    """True iff ``draft_row``'s ranks are a componentwise prefix of
+    ``target_row``'s — i.e. the draft submodel's factors are literally the
+    leading columns of the target's (the paper's importance-ordered
+    nesting). This is what makes the draft row a *free* speculative-decoding
+    draft model: no extra weights, no separate training."""
+    t = table.table
+    return bool(np.all(t[draft_row] <= t[target_row]))
+
+
+def nested_prefix_row(table: ProfileTable, target_row: int, budget: float,
+                      cost_table: Optional[np.ndarray] = None
+                      ) -> Optional[int]:
+    """Largest row strictly below ``target_row`` whose deployed cost stays
+    within ``budget`` (fraction of the top row) and whose ranks are a
+    nested prefix of the target row's.
+
+    ``cost_table``: per-row deployed cost (the serving router's precomputed
+    ``deployed_param_count`` table); defaults to rank sums, which order rows
+    identically for nested tables. The profile table certifies global
+    nestedness at construction, so every lower row qualifies structurally —
+    this helper still validates the prefix property (defense against
+    hand-built tables) and applies the budget cap. Returns ``None`` when no
+    strictly-smaller prefix row fits (e.g. ``target_row == 0``): callers
+    should then disable speculation for that row rather than draft with an
+    equal-or-larger submodel.
+    """
+    if target_row <= 0:
+        return None
+    if cost_table is None:
+        cost_table = table.table.sum(axis=1)
+    cost_table = np.asarray(cost_table, np.float64)
+    full = float(cost_table[-1])
+    for row in range(target_row - 1, -1, -1):
+        if not is_nested_prefix(table, row, target_row):
+            continue
+        if cost_table[row] <= budget * full + 1e-9:
+            return row
+    return None
+
+
 def deployed_param_count(cfg: ModelConfig, infos: List[GroupInfo],
                          table: ProfileTable, k: int) -> int:
     """Parameters of the budget-k realization (GAR form, identity not stored)."""

@@ -1,11 +1,14 @@
 """Serving launcher: build (or load) an elastic model, serve a stream of
 requests at mixed budgets through the GAR-deployed submodels with the
-continuous-batching engine (paged KV cache, iteration-level join, and —
-with ``--prefill-chunk`` — chunked prefill fused into decode iterations).
+continuous-batching engine (paged KV cache, iteration-level join, with
+``--prefill-chunk`` chunked prefill fused into decode iterations, and with
+``--spec-draft-rank`` nested self-speculative decoding: a low-rank prefix
+row drafts ``--spec-len`` tokens per round, the full row verifies them in
+one multi-token forward).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small --smoke \
       --requests 6 --budgets 0.4,0.7,1.0 --engine continuous \
-      --prefill-chunk 64
+      --prefill-chunk 64 --spec-draft-rank 0.5 --spec-len 4
 """
 from __future__ import annotations
 
@@ -19,7 +22,7 @@ from repro.data import make_source
 from repro.launch.train import build_flexrank_state
 from repro.models import common as cm
 from repro.models import transformer as tfm
-from repro.serving import ElasticEngine, Request
+from repro.serving import ElasticEngine, Request, SamplingParams, SpecConfig
 
 
 def main(argv=None):
@@ -45,10 +48,26 @@ def main(argv=None):
                     help="total tokens per mixed iteration "
                          "(0 = max_batch + prefill_chunk; requires "
                          "--prefill-chunk)")
+    ap.add_argument("--prefill-order", default="fifo",
+                    choices=["fifo", "srpf"],
+                    help="who gets prefill budget first when it spills "
+                         "over: admission order, or shortest remaining "
+                         "prefill first")
+    ap.add_argument("--spec-draft-rank", type=float, default=0.0,
+                    help="budget fraction of the speculative draft row "
+                         "(0 = speculation off); drafts run on the nested "
+                         "low-rank prefix submodel, the full row verifies")
+    ap.add_argument("--spec-len", type=int, default=4,
+                    help="draft tokens proposed per speculative round")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for all requests "
+                         "(0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation when sampling (0 = off)")
     args = ap.parse_args(argv)
-    if args.token_budget and not args.prefill_chunk:
-        ap.error("--token-budget only applies to mixed iterations; "
-                 "set --prefill-chunk too")
+    if args.token_budget and not (args.prefill_chunk or args.spec_draft_rank):
+        ap.error("--token-budget only applies to mixed or speculative "
+                 "iterations; set --prefill-chunk or --spec-draft-rank too")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     rng = np.random.default_rng(args.seed)
@@ -56,18 +75,27 @@ def main(argv=None):
 
     dense = cm.instantiate(tfm.model_spec(cfg), jax.random.PRNGKey(args.seed))
     params_fact, table, infos = build_flexrank_state(cfg, dense, source)
+    spec = (SpecConfig(draft_rank=args.spec_draft_rank,
+                       spec_len=args.spec_len)
+            if args.spec_draft_rank else None)
     engine = ElasticEngine(cfg, params_fact, table, infos,
                            max_batch=args.max_batch, max_len=args.max_len,
                            block_size=args.block_size,
                            prefill_chunk=args.prefill_chunk or None,
-                           token_budget=args.token_budget or None)
+                           token_budget=args.token_budget or None,
+                           prefill_order=args.prefill_order,
+                           spec=spec)
 
     budgets = [float(b) for b in args.budgets.split(",")]
+    sampling = (SamplingParams(temperature=args.temperature,
+                               top_k=args.top_k, seed=args.seed)
+                if args.temperature > 0 else None)
     reqs = []
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len).astype(np.int32)
         reqs.append(Request(prompt=prompt, max_new_tokens=args.max_new,
-                            budget=budgets[i % len(budgets)]))
+                            budget=budgets[i % len(budgets)],
+                            sampling=sampling))
     results = engine.generate(reqs, mode=args.engine)
     for i, (rq, rs) in enumerate(zip(reqs, results)):
         print(f"req {i}: budget={rq.budget:.2f} -> row {rs.budget_row} "
@@ -85,6 +113,11 @@ def main(argv=None):
             print(f"# chunked prefill: chunk={args.prefill_chunk}, "
                   f"budget={engine.token_budget}, "
                   f"{s['mixed_iterations']:.0f} mixed iterations")
+        if args.spec_draft_rank and s["spec_rounds"]:
+            print(f"# spec decode: draft_rank={args.spec_draft_rank}, "
+                  f"k={args.spec_len}, {s['spec_rounds']:.0f} rounds, "
+                  f"acceptance {s['spec_acceptance_rate']:.2f}, "
+                  f"mean accepted len {s['spec_mean_accepted_len']:.2f}")
     return results
 
 

@@ -782,3 +782,35 @@ def paged_mixed_step(
                                        "positions": positions,
                                        "block_tables": block_tables,
                                        "segments": segments}
+
+
+def paged_verify_step(
+    params: Dict,
+    cfg: ModelConfig,
+    caches: Dict,
+    tokens: Array,
+    *,
+    ranks: Optional[Dict] = None,
+    use_pallas=False,
+) -> Tuple[Array, Dict]:
+    """Full-row verification forward for nested self-speculative decoding:
+    score ``k+1`` positions per sequence in ONE call over the paged cache.
+
+    Layout is the flat-token layout of ``paged_mixed_step`` — each verifying
+    sequence contributes a run of ``k+1`` consecutive tokens (its last
+    committed token followed by ``k`` draft proposals) routed to its
+    *target* cache slot via per-token ``slot_ids``/``positions``; target
+    prefill chunks of other sequences may ride the same batch. Every run's
+    K/V lands in the target slot's blocks before attention, so position
+    ``i`` of a run attends over exactly the context target-only decoding
+    would have seen — greedy acceptance over the returned logits is
+    therefore token-identical to non-speculative decoding, and rejected
+    suffixes are rolled back host-side with ``PagedKVCache.truncate_slot``.
+
+    Sharing the ``paged_mixed_step`` body (same ``_run_paged_segments``
+    loop, same ``paged_prefill_attention`` kernel) is deliberate: the PR-2
+    parity suites that pin the mixed path to the sequential decode path are
+    what carry the verify path's exactness.
+    """
+    return paged_mixed_step(params, cfg, caches, tokens, ranks=ranks,
+                            use_pallas=use_pallas)

@@ -1,13 +1,25 @@
 """Elastic serving subsystem: continuous batching over nested FlexRank
-submodels with a block-paged KV cache and budget-aware scheduling."""
+submodels with a block-paged KV cache, budget-aware scheduling, per-request
+sampling, and nested self-speculative decoding."""
 from repro.serving.batcher import ContinuousBatcher
 from repro.serving.engine import CacheOOM, ElasticEngine, Request, Result
 from repro.serving.kv_cache import BlockAllocator, PagedKVCache
 from repro.serving.metrics import ServingMetrics
+from repro.serving.sampling import SamplerState, SamplingParams
 from repro.serving.scheduler import BudgetRouter, Scheduler, Sequence
 
 __all__ = [
     "BlockAllocator", "BudgetRouter", "CacheOOM", "ContinuousBatcher",
-    "ElasticEngine", "PagedKVCache", "Request", "Result", "Scheduler",
-    "Sequence", "ServingMetrics",
+    "ElasticEngine", "PagedKVCache", "Request", "Result", "SamplerState",
+    "SamplingParams", "Scheduler", "Sequence", "ServingMetrics",
+    "SpecConfig", "SpecDecoder",
 ]
+
+
+def __getattr__(name):
+    # lazy re-export: repro.spec itself imports serving submodules, so a
+    # top-level import here would be circular whichever package loads first
+    if name in ("SpecConfig", "SpecDecoder"):
+        from repro import spec
+        return getattr(spec, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -105,6 +105,15 @@ class ContinuousBatcher:
     def next_token(self, slot: int) -> int:
         return int(self._next_token[slot])
 
+    def feed(self, slot: int, token: int) -> None:
+        """Set the token a decoding slot feeds next iteration directly.
+        Speculative rounds commit several tokens at once via the sequence's
+        ``generated`` list and only the last one is ever fed, so they bypass
+        ``advance`` (which records exactly one token per slot)."""
+        seq = self.slots[slot]
+        assert seq is not None and seq.state == "decoding", slot
+        self._next_token[slot] = token
+
     def feed_tokens(self) -> np.ndarray:
         """(B, 1) int32 next-token batch (idle slots feed token 0)."""
         return self._next_token[:, None].copy()

@@ -22,19 +22,33 @@ request names a budget, the scheduler routes it to a GAR-deployed row
     regenerated tokens identical) — the victim may be *mid-prefill*, in
     which case its partial chunks are discarded with its blocks.
 
+  * **nested self-speculative decoding** (``spec`` set): the low-rank
+    prefix row of the same nested decomposition proposes ``spec_len``
+    tokens per round and the full row verifies them in ONE multi-token
+    ``paged_verify_step`` forward; greedy acceptance is token-identical to
+    target-only decoding. Each sequence holds a draft + target cache slot
+    pair over one shared allocator; rejected drafts roll back via
+    ``truncate_slot``. See ``repro.spec`` for the round anatomy.
+
 Knobs: ``prefill_chunk`` (prompt tokens per chunk; ``None`` keeps the PR-1
 behavior of one batch-1 full-prompt forward at admission — the benchmark
-baseline) and ``token_budget`` (total tokens per mixed iteration, default
+baseline), ``token_budget`` (total tokens per mixed iteration, default
 ``max_batch + prefill_chunk``; decode tokens are reserved first, so a long
-prefill can never starve running decodes). See ``scheduler`` for the
-waiting -> prefilling -> decoding state machine.
+prefill can never starve running decodes), ``prefill_order`` (``"fifo"``
+admission order vs ``"srpf"`` shortest-remaining-prefill-first when budget
+spills over), ``spec`` (a ``repro.spec.SpecConfig`` turning on speculative
+decoding; per-request override via ``Request.spec_len``). Sampling is
+per-request (``Request.sampling``): greedy argmax by default, temperature /
+top-k with a resettable per-request PRNG stream otherwise (recompute after
+preemption replays identical draws). See ``scheduler`` for the waiting ->
+prefilling -> decoding state machine.
 
 Families outside the paged path (mamba/rwkv/zamba/MLA/enc-dec) fall back to
 the drain-batch engine, itself upgraded to single-pass prefill.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
@@ -46,8 +60,12 @@ from repro.models import transformer as tfm
 from repro.serving.batcher import ContinuousBatcher
 from repro.serving.kv_cache import CacheOOM, PagedKVCache
 from repro.serving.metrics import ServingMetrics
+from repro.serving.sampling import SamplerState, sample_token
 from repro.serving.scheduler import (BudgetRouter, Request, Result, Scheduler,
                                      Sequence)
+
+if TYPE_CHECKING:    # runtime import is lazy: repro.spec imports serving
+    from repro.spec import SpecConfig    # submodules (cycle otherwise)
 
 __all__ = ["ElasticEngine", "Request", "Result", "CacheOOM"]
 
@@ -58,6 +76,8 @@ class ElasticEngine:
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  token_budget: Optional[int] = None,
+                 prefill_order: str = "fifo",
+                 spec: "Optional[SpecConfig]" = None,
                  use_pallas=False):
         self.cfg = cfg
         self.params_fact = params_fact
@@ -71,10 +91,13 @@ class ElasticEngine:
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.prefill_chunk = prefill_chunk
-        if token_budget is not None and prefill_chunk is None:
+        if prefill_order not in ("fifo", "srpf"):
+            raise ValueError(f"unknown prefill_order {prefill_order!r}")
+        self.prefill_order = prefill_order
+        if token_budget is not None and prefill_chunk is None and spec is None:
             raise ValueError(
-                "token_budget only applies to mixed chunked-prefill "
-                "iterations; set prefill_chunk too")
+                "token_budget only applies to mixed chunked-prefill or "
+                "speculative iterations; set prefill_chunk or spec too")
         if token_budget is None and prefill_chunk is not None:
             token_budget = max_batch + prefill_chunk
         if token_budget is not None and token_budget < max_batch + 1:
@@ -82,6 +105,7 @@ class ElasticEngine:
                 f"token_budget {token_budget} leaves no room for prefill "
                 f"beside {max_batch} decode slots (need >= max_batch + 1)")
         self.token_budget = token_budget
+        self.spec = spec
         self._deployed: Dict[int, object] = {}
         # deployed-param cost per budget row, computed ONCE (the seed redid
         # this O(rows) scan inside every routing call)
@@ -104,6 +128,11 @@ class ElasticEngine:
             lambda p, caches, tok: tfm.paged_mixed_step(
                 p, self.cfg, caches, tok, use_pallas=self.use_pallas),
             donate_argnums=(1,))
+        # verify forward for speculative rounds: ``tfm.paged_verify_step``
+        # (k+1 scored positions per sequence) IS the mixed-step computation,
+        # so sharing the jit object shares its compile cache — a row served
+        # both speculatively and not compiles each width bucket once
+        self._verify_jit = self._mixed_jit
 
     # ------------------------------------------------------------ routing
 
@@ -116,6 +145,16 @@ class ElasticEngine:
             self._deployed[row] = FR.gar_deploy(
                 self.params_fact, self.cfg, self.infos, self.table, row)
         return self._deployed[row]
+
+    def spec_draft_row(self, row: int) -> Optional[int]:
+        """Draft row for serving ``row`` speculatively: the largest nested
+        prefix row within ``spec.draft_rank`` of the full model, strictly
+        below the target. ``None`` (speculation off for this row) when spec
+        is unset or no smaller prefix row exists."""
+        if self.spec is None:
+            return None
+        return FR.nested_prefix_row(self.table, row, self.spec.draft_rank,
+                                    self._cost_table)
 
     # ----------------------------------------------------------- generate
 
@@ -158,7 +197,14 @@ class ElasticEngine:
                      else self._serve_row_mixed)
         while sched.has_waiting():
             row = sched.next_row()
-            serve_row(row, sched, metrics, results)
+            draft_row = self.spec_draft_row(row)
+            if draft_row is not None:
+                from repro.spec import SpecDecoder
+                SpecDecoder(self, row=row, draft_row=draft_row,
+                            spec=self.spec, sched=sched, metrics=metrics,
+                            results=results).serve()
+            else:
+                serve_row(row, sched, metrics, results)
         return [results[s.req_id] for s in submitted]
 
     def _finish(self, seq: Sequence, metrics, results) -> None:
@@ -200,7 +246,12 @@ class ElasticEngine:
                 params, cache.model_caches(cache.active_max_blocks()),
                 jnp.asarray(batcher.feed_tokens()))
             cache.update_pools(new_caches)
-            sampled = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+            sampled = np.array(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+            for slot in batcher.active_slots():
+                seq = batcher.slots[slot]
+                if not seq.sampler.greedy:   # greedy keeps the device argmax
+                    sampled[slot] = seq.sampler.sample(
+                        np.asarray(logits[slot, 0]))
             stepped = batcher.active_sequences()
             for seq in stepped:
                 metrics.on_token(seq.req_id)
@@ -248,7 +299,7 @@ class ElasticEngine:
         padded[0, :plen] = np.asarray(seq.request.prompt, np.int32)
         logits, state = self._prefill_jit(params, state, jnp.asarray(padded))
         cache.write_prefill(slot, state["segments"])
-        return int(np.asarray(jnp.argmax(logits[0, plen - 1])))
+        return sample_token(seq, np.asarray(logits[0, plen - 1]))
 
     def _block_holders(self, cache, batcher):
         """Seated sequences that actually own blocks — the only useful
@@ -288,14 +339,17 @@ class ElasticEngine:
 
     # ------------------------------ chunked prefill / mixed iterations
 
-    def _bucket_tokens(self, used: int) -> int:
+    def _bucket_tokens(self, used: int, budget: Optional[int] = None) -> int:
         """Flat-batch width bucket: smallest power of two >= used (floor 8),
         capped at the token budget — O(log budget) jit traces, and pure
-        decode iterations don't pay for unused prefill budget."""
+        decode iterations don't pay for unused prefill budget. ``budget``
+        overrides ``self.token_budget`` (the spec decoder carries its own)."""
+        if budget is None:
+            budget = self.token_budget
         t = 8
         while t < used:
             t *= 2
-        return min(t, max(self.token_budget, used))
+        return min(t, max(budget, used))
 
     def _serve_row_mixed(self, row: int, sched: Scheduler,
                          metrics: ServingMetrics,
@@ -337,7 +391,8 @@ class ElasticEngine:
             prefilling = [batcher.slots[s] for s in batcher.prefill_slots()]
             chunks = []                      # (slot, seq, start, n)
             for seq, want in Scheduler.plan_prefill_chunks(
-                    prefilling, budget_left, self.prefill_chunk):
+                    prefilling, budget_left, self.prefill_chunk,
+                    order=self.prefill_order):
                 slot = batcher.slot_of(seq)
                 got = cache.extend_slot(slot, want, clip=True)
                 if got:
@@ -351,14 +406,17 @@ class ElasticEngine:
 
             logits = self._dispatch_mixed(params, cache, batcher,
                                           decode_slots, chunks)
-            sampled = np.asarray(jnp.argmax(logits[0], axis=-1), np.int32)
+            sampled = np.array(jnp.argmax(logits[0], axis=-1), np.int32)
 
             # commit decodes first: `advance` must only see sequences that
             # actually decoded this iteration, not freshly flipped ones
             sampled_b = np.zeros(self.max_batch, np.int32)
             for i, slot in enumerate(decode_slots):
+                seq = batcher.slots[slot]
+                if not seq.sampler.greedy:
+                    sampled[i] = seq.sampler.sample(np.asarray(logits[0, i]))
                 sampled_b[slot] = sampled[i]
-                metrics.on_token(batcher.slots[slot].req_id)
+                metrics.on_token(seq.req_id)
             for slot in batcher.advance(sampled_b):
                 seq = batcher.leave(slot)
                 cache.free_slot(slot)
@@ -375,6 +433,9 @@ class ElasticEngine:
                 if seq.prefill_pos == seq.prompt_len:
                     metrics.on_prefill_end(seq.req_id)
                     first = int(sampled[flat + n - 1])
+                    if not seq.sampler.greedy:
+                        first = seq.sampler.sample(
+                            np.asarray(logits[0, flat + n - 1]))
                     seq.generated.append(first)
                     metrics.on_first_token(seq.req_id)
                     if seq.done:             # max_new_tokens == 1
@@ -387,26 +448,37 @@ class ElasticEngine:
             metrics.on_mixed_step(len(decode_slots), total_chunk,
                                   cache.occupancy())
 
-    def _dispatch_mixed(self, params, cache, batcher, decode_slots, chunks):
-        """Build the flat token batch (decode tokens then chunks, padded to a
-        width bucket) and run one fused ``paged_mixed_step``."""
-        used = len(decode_slots) + sum(n for _, _, _, n in chunks)
-        width = self._bucket_tokens(used)
+    @staticmethod
+    def _pack_flat(entries, width: int, null_slot: int):
+        """Flat-token layout shared by the mixed and speculative paths:
+        ``entries`` are (slot, tokens, start) runs — ``tokens`` land at
+        positions ``start..start+n-1`` of ``slot``'s sequence; pads point
+        ``slot_ids`` at ``null_slot`` (a block-table row of null blocks) so
+        their reads/writes never touch a live sequence."""
         tok = np.zeros(width, np.int32)
-        sid = np.full(width, self.max_batch, np.int32)   # pads -> null row
+        sid = np.full(width, null_slot, np.int32)
         pos = np.zeros(width, np.int32)
         i = 0
-        for slot in decode_slots:
-            tok[i] = batcher.next_token(slot)
-            sid[i] = slot
-            pos[i] = cache.slots[slot].num_tokens - 1
-            i += 1
-        for slot, seq, start, n in chunks:
-            tok[i: i + n] = np.asarray(seq.request.prompt[start: start + n],
-                                       np.int32)
+        for slot, toks, start in entries:
+            n = len(toks)
+            tok[i: i + n] = toks
             sid[i: i + n] = slot
             pos[i: i + n] = np.arange(start, start + n, dtype=np.int32)
             i += n
+        return tok, sid, pos
+
+    def _dispatch_mixed(self, params, cache, batcher, decode_slots, chunks):
+        """Build the flat token batch (decode tokens then chunks, padded to a
+        width bucket) and run one fused ``paged_mixed_step``."""
+        entries = [(slot, [batcher.next_token(slot)],
+                    cache.slots[slot].num_tokens - 1)
+                   for slot in decode_slots]
+        entries += [(slot, np.asarray(seq.request.prompt[start: start + n],
+                                      np.int32), start)
+                    for slot, seq, start, n in chunks]
+        used = len(decode_slots) + sum(n for _, _, _, n in chunks)
+        width = self._bucket_tokens(used)
+        tok, sid, pos = self._pack_flat(entries, width, self.max_batch)
         caches = {
             "slot_ids": jnp.asarray(sid),
             "positions": jnp.asarray(pos),
@@ -444,16 +516,22 @@ class ElasticEngine:
             rows.setdefault(self._budget_row(r.budget), []).append(i)
         for row, idxs in rows.items():
             params = self._realize(row)
-            results = self._serve_batch(params, row, [requests[i] for i in idxs])
+            results = self._serve_batch(params, row,
+                                        [requests[i] for i in idxs], idxs)
             for i, res in zip(idxs, results):
                 out[i] = res
         return out  # type: ignore[return-value]
 
-    def _serve_batch(self, params, row: int, reqs: List[Request]) -> List[Result]:
+    def _serve_batch(self, params, row: int, reqs: List[Request],
+                     req_ids: List[int]) -> List[Result]:
         results = []
         for chunk_start in range(0, len(reqs), self.max_batch):
             chunk = reqs[chunk_start: chunk_start + self.max_batch]
             b = len(chunk)
+            # samplers keyed by submission index, matching the continuous
+            # engines' req_ids — same request, same stochastic stream
+            samplers = [SamplerState(r.sampling, rid) for r, rid in
+                        zip(chunk, req_ids[chunk_start: chunk_start + b])]
             state = tfm.init_decode_state(self.cfg, b, self.max_len,
                                           dtype=jnp.float32)
             toks = [list(map(int, r.prompt)) for r in chunk]
@@ -462,12 +540,21 @@ class ElasticEngine:
             padded = np.zeros((b, plen), np.int32)
             for i, t in enumerate(toks):
                 padded[i, : len(t)] = t
+
+            def _next(logits_last):
+                cur = np.array(jnp.argmax(logits_last, axis=-1),
+                               np.int32)[:, None]
+                for i, s in enumerate(samplers):
+                    if not s.greedy:
+                        cur[i, 0] = s.sample(np.asarray(logits_last[i]))
+                return cur
+
             logits, state = self._prefill_jit(params, state, jnp.asarray(padded))
-            cur = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)[:, None]
+            cur = _next(logits[:, -1])
             outs = [padded, cur]
             for _ in range(max_new - 1):
                 logits, state = self._decode_jit(params, state, jnp.asarray(cur))
-                cur = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)[:, None]
+                cur = _next(logits[:, 0])
                 outs.append(cur)
             seq = np.concatenate(outs, axis=1)
             dp = self.router.deployed_params(row)

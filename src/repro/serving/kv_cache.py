@@ -170,6 +170,25 @@ class PagedKVCache:
         st = self.slots[slot]
         return st is not None and st.num_tokens % self.block_size == 0
 
+    def truncate_slot(self, slot: int, num_tokens: int) -> int:
+        """Rollback: rewind the slot's write position to ``num_tokens`` and
+        release the blocks past the new boundary (speculative decoding frees
+        rejected draft tokens this way — the slot stays seated, only its
+        tail is discarded). Stale K/V inside the kept blocks is harmless:
+        attention masks by context length and later writes overwrite in
+        place. Returns the number of blocks released."""
+        st = self.slots[slot]
+        assert st is not None, slot
+        assert 0 <= num_tokens <= st.num_tokens, (num_tokens, st.num_tokens)
+        keep = self.blocks_needed(num_tokens)
+        released = len(st.blocks) - keep
+        if released > 0:
+            self.allocator.free(st.blocks[keep:])
+            self._tables[slot, keep: len(st.blocks)] = NULL_BLOCK
+            del st.blocks[keep:]
+        st.num_tokens = num_tokens
+        return max(released, 0)
+
     def free_slot(self, slot: int) -> None:
         st = self.slots[slot]
         assert st is not None, slot
@@ -179,6 +198,17 @@ class PagedKVCache:
 
     # ------------------------------------------------------------ device
 
+    def host_tables(self, max_blocks: Optional[int] = None, *,
+                    null_rows: int = 0) -> np.ndarray:
+        """Host-side copy of the block tables (see ``device_tables``) — for
+        callers that dispatch several forwards against one table snapshot
+        (donated device uploads cannot be reused across dispatches)."""
+        t = self._tables if max_blocks is None else self._tables[:, :max_blocks]
+        if null_rows:
+            t = np.concatenate(
+                [t, np.full((null_rows, t.shape[1]), NULL_BLOCK, np.int32)])
+        return t
+
     def device_tables(self, max_blocks: Optional[int] = None, *,
                       null_rows: int = 0) -> jax.Array:
         """Block tables, optionally truncated to ``max_blocks`` columns —
@@ -186,11 +216,7 @@ class PagedKVCache:
         of ``max_len`` (the whole point of paging). ``null_rows`` appends
         rows of null blocks: the mixed-iteration path points pad tokens at
         such a row so their reads/writes never touch a live sequence."""
-        t = self._tables if max_blocks is None else self._tables[:, :max_blocks]
-        if null_rows:
-            t = np.concatenate(
-                [t, np.full((null_rows, t.shape[1]), NULL_BLOCK, np.int32)])
-        return jnp.asarray(t)
+        return jnp.asarray(self.host_tables(max_blocks, null_rows=null_rows))
 
     def device_positions(self) -> jax.Array:
         """(B,) 0-based index of the token being decoded this step per slot.

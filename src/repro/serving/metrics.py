@@ -1,6 +1,7 @@
 """Serving metrics: tokens/s, time-to-first-token (broken into queue /
-prefill / first-decode), KV-cache occupancy, and per-iteration token-budget
-accounting for mixed prefill/decode iterations.
+prefill / first-decode), KV-cache occupancy, per-iteration token-budget
+accounting for mixed prefill/decode iterations, and draft/verify acceptance
+accounting for speculative decoding rounds.
 
 Collected host-side by the engine loop (one sample per scheduler iteration)
 — cheap enough to stay on for production traffic.
@@ -73,6 +74,12 @@ class ServingMetrics:
         # one (decode_tokens, prefill_tokens) pair per mixed iteration —
         # the token-budget audit trail for the chunked-prefill engine
         self.iteration_log: List[Tuple[int, int]] = []
+        # one (draft_tokens, verify_tokens, accepted_tokens, drafting_seqs)
+        # tuple per speculative round — the draft/verify audit trail
+        self.spec_round_log: List[Tuple[int, int, int, int]] = []
+        self.draft_tokens = 0
+        self.accepted_draft_tokens = 0
+        self.drafting_seq_rounds = 0
         self._start: Optional[float] = None
         self._end: Optional[float] = None
 
@@ -129,6 +136,20 @@ class ServingMetrics:
             self.decode_steps += 1
         self.occupancy_samples.append(occupancy)
 
+    def on_spec_round(self, draft_tokens: int, verify_tokens: int,
+                      accepted_tokens: int, drafting_seqs: int = 0) -> None:
+        """One speculative draft/verify round: ``draft_tokens`` proposals
+        went through the draft row, ``verify_tokens`` positions through the
+        full-row verify forward, and ``accepted_tokens`` drafts survived the
+        longest-accepted-prefix check across ``drafting_seqs`` sequences
+        that proposed at least one draft (committed corrections are counted
+        by ``on_token``, not here)."""
+        self.spec_round_log.append(
+            (draft_tokens, verify_tokens, accepted_tokens, drafting_seqs))
+        self.draft_tokens += draft_tokens
+        self.accepted_draft_tokens += accepted_tokens
+        self.drafting_seq_rounds += drafting_seqs
+
     def on_token(self, req_id: int) -> None:
         self.traces[req_id].new_tokens += 1
 
@@ -168,4 +189,13 @@ class ServingMetrics:
             "preemptions": self.preemptions,
             "cache_occupancy_mean": _mean(occ),
             "cache_occupancy_peak": max(occ) if occ else 0.0,
+            "spec_rounds": len(self.spec_round_log),
+            "spec_draft_tokens": self.draft_tokens,
+            "spec_accepted_tokens": self.accepted_draft_tokens,
+            "spec_acceptance_rate": (self.accepted_draft_tokens
+                                     / max(self.draft_tokens, 1)),
+            # accepted drafts per drafting sequence-round (<= spec_len);
+            # each such round also commits one correction token on top
+            "spec_mean_accepted_len": (self.accepted_draft_tokens
+                                       / max(self.drafting_seq_rounds, 1)),
         }

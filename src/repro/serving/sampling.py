@@ -1,0 +1,89 @@
+"""Per-request token sampling: temperature / top-k with explicit PRNG state.
+
+The seed engine argmaxed everything; this module makes sampling a
+per-request property. ``Request.sampling`` carries the knobs, every admitted
+``Sequence`` owns a ``SamplerState`` whose generator is seeded
+deterministically from ``(seed, req_id)`` — so a preempted sequence that is
+recomputed replays *exactly* the same draws (``reset()`` re-seeds), keeping
+the scheduler's recompute-identity guarantee even for stochastic requests.
+
+Greedy (``temperature == 0``, the default) stays the fast path: engines
+argmax the whole batch on device and only fall back to the host-side sampler
+for the slots that asked for it. Speculative decoding's token-identity
+guarantee is stated for greedy only; sampled sequences run with a draft
+length of 0 (plain verify-as-decode), which is exact by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs. ``temperature == 0`` means greedy (the
+    default everywhere); ``top_k == 0`` means no top-k truncation."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+
+GREEDY = SamplingParams()
+
+
+class SamplerState:
+    """One request's sampler: params + a resettable PRNG stream.
+
+    The stream is keyed by ``(seed, req_id)`` so two requests with the same
+    user seed still draw independently, and ``reset()`` restores the stream
+    to its initial state for preemption-recompute replay.
+    """
+
+    def __init__(self, params: Optional[SamplingParams], req_id: int):
+        self.params = params or GREEDY
+        self._key = (self.params.seed, req_id)
+        self._rng: Optional[np.random.Generator] = None
+        self.reset()
+
+    def reset(self) -> None:
+        """Rewind the PRNG to its initial state (recompute replays draws)."""
+        if not self.greedy:
+            self._rng = np.random.default_rng(self._key)
+
+    @property
+    def greedy(self) -> bool:
+        return self.params.temperature <= 0.0
+
+    def sample(self, logits: np.ndarray) -> int:
+        """Draw one token from a (V,) float logits row."""
+        logits = np.asarray(logits, np.float64)
+        if self.greedy:
+            return int(np.argmax(logits))
+        z = logits / self.params.temperature
+        if self.params.top_k:
+            k = min(self.params.top_k, z.shape[-1])
+            cutoff = np.partition(z, -k)[-k]
+            z = np.where(z >= cutoff, z, -np.inf)
+        z = z - z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self._rng.choice(z.shape[-1], p=p))
+
+
+def sample_token(seq, logits_row) -> int:
+    """Sample the next token for ``seq`` from its (V,) logits row. Engines
+    call this at every point a token is materialized (decode step, prefill
+    completion, verify position) so one code path owns the greedy/stochastic
+    split."""
+    sampler = getattr(seq, "sampler", None)
+    if sampler is None or sampler.greedy:
+        return int(np.argmax(np.asarray(logits_row)))
+    return sampler.sample(np.asarray(logits_row))

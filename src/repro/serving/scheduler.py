@@ -42,12 +42,19 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.serving.sampling import SamplerState, SamplingParams
+
 
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray          # (S_prompt,) int32
     max_new_tokens: int = 16
     budget: float = 1.0         # relative size in (0, 1]
+    # per-request sampling (None = greedy argmax, the default)
+    sampling: Optional[SamplingParams] = None
+    # per-request speculative draft length override: None = engine default,
+    # 0 = disable speculation for this request (plain decode)
+    spec_len: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -68,6 +75,7 @@ class Sequence:
     admissions: int = 0          # >1 after preemption
     state: str = "waiting"       # waiting | prefilling | decoding
     prefill_pos: int = 0         # prompt tokens already pushed through
+    sampler: Optional[SamplerState] = None   # set at submit
 
     @property
     def prompt_len(self) -> int:
@@ -81,10 +89,17 @@ class Sequence:
     def prefill_remaining(self) -> int:
         return self.prompt_len - self.prefill_pos
 
+    @property
+    def remaining(self) -> int:
+        return self.request.max_new_tokens - len(self.generated)
+
     def reset_for_recompute(self) -> None:
         self.generated.clear()
         self.prefill_pos = 0
         self.state = "waiting"
+        if self.sampler is not None:
+            # recompute must replay the same stochastic draws token-for-token
+            self.sampler.reset()
 
 
 class BudgetRouter:
@@ -113,6 +128,7 @@ class Scheduler:
     def submit(self, request: Request) -> Sequence:
         row = self.router.route(request.budget)
         seq = Sequence(req_id=self._next_id, request=request, row=row)
+        seq.sampler = SamplerState(request.sampling, seq.req_id)
         self._next_id += 1
         self.queues.setdefault(row, deque()).append(seq)
         return seq
@@ -155,18 +171,30 @@ class Scheduler:
 
     @staticmethod
     def plan_prefill_chunks(prefilling: List[Sequence], budget: int,
-                            chunk: int) -> List[tuple]:
+                            chunk: int, order: str = "fifo") -> List[tuple]:
         """Per-iteration prefill budget accounting.
 
         ``prefilling``: seated sequences in admission (FIFO) order;
         ``budget``: tokens left this iteration after the decode batch took
         one slot each; ``chunk``: the prefill-chunk knob. Returns
         ``[(seq, n), ...]`` with every ``n >= 1``, each clipped to
-        ``min(chunk, seq.prefill_remaining, budget_left)``. Earlier
-        sequences are budgeted first, so within a budget row prompts finish
-        prefilling in admission order. Cache-capacity clipping happens in
-        the engine (it may shrink ``n`` further when the free list is low).
+        ``min(chunk, seq.prefill_remaining, budget_left)``.
+
+        ``order`` picks who gets budgeted first when it spills over:
+        ``"fifo"`` (default) budgets admission order, so within a budget row
+        prompts finish prefilling in admission order; ``"srpf"``
+        (shortest-remaining-prefill-first) budgets the sequence closest to
+        finishing its prompt, draining near-done prefills into decoders
+        sooner at the cost of FIFO completion (ties break by admission
+        order, so equal-remaining sequences never starve each other).
+        Cache-capacity clipping happens in the engine (it may shrink ``n``
+        further when the free list is low).
         """
+        if order not in ("fifo", "srpf"):
+            raise ValueError(f"unknown prefill order {order!r}")
+        if order == "srpf":
+            prefilling = sorted(prefilling,
+                                key=lambda s: (s.prefill_remaining, s.req_id))
         plan = []
         for seq in prefilling:
             if budget <= 0:

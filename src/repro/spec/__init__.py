@@ -1,0 +1,14 @@
+"""Nested self-speculative decoding: draft with a low-rank prefix submodel,
+verify with the full-rank row, over the paged KV cache.
+
+FlexRank's importance-ordered nesting makes every lower budget row a prefix
+view of every higher one — a ready-made draft/verify pair that needs no
+separate draft model and no extra weight memory. ``SpecConfig`` names the
+draft budget and draft length; ``SpecDecoder`` drives the draft/verify
+rounds for one budget row inside the serving engine's continuous-batching
+loop (greedy acceptance, token-identical to target-only decoding).
+"""
+from repro.spec.config import SpecConfig
+from repro.spec.decoder import SpecDecoder
+
+__all__ = ["SpecConfig", "SpecDecoder"]

@@ -1,0 +1,63 @@
+"""Speculative-decoding configuration for the elastic serving engine."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Knobs for nested self-speculative decoding.
+
+    ``draft_rank``: budget fraction (like ``Request.budget``) naming the
+    *draft* profile-table row. For every served target row the engine
+    resolves the largest nested prefix row strictly below it within this
+    fraction (``core.flexrank.nested_prefix_row``); rows with no smaller
+    prefix row (the bottom row) serve without speculation.
+
+    ``spec_len``: draft tokens proposed per round (the classic ``k``).
+    Per-request override via ``Request.spec_len`` (0 disables speculation
+    for that request). Sequences with stochastic sampling always run at
+    ``k = 0`` — the greedy token-identity guarantee is stated for greedy
+    requests only, and a ``k = 0`` round is plain decoding through the
+    verify forward, exact for any sampler.
+
+    ``gap_chunk``: draft-cache warmup tokens fed per round. The draft slot
+    is never prefilled eagerly — the first rounds after a sequence starts
+    decoding stream its committed tokens (prompt included) through the
+    draft row in chunks of this size, while the sequence keeps decoding at
+    ``k = 0`` through verify. Drafting starts once the draft cache has
+    caught up.
+    """
+    draft_rank: float = 0.5
+    spec_len: int = 4
+    gap_chunk: int = 32
+
+    def __post_init__(self):
+        if not 0.0 < self.draft_rank <= 1.0:
+            raise ValueError(
+                f"draft_rank must be in (0, 1], got {self.draft_rank}")
+        if self.spec_len < 1:
+            raise ValueError(f"spec_len must be >= 1, got {self.spec_len}")
+        if self.gap_chunk < 1:
+            raise ValueError(f"gap_chunk must be >= 1, got {self.gap_chunk}")
+
+    def request_can_draft(self, seq) -> bool:
+        """Whether this request can EVER draft: greedy sampling and not
+        opted out via ``Request.spec_len = 0``. Permanently-disabled
+        sequences skip draft-cache warmup entirely — no draft-row forwards,
+        no draft-slot blocks — and decode through verify-only rounds."""
+        if seq.sampler is not None and not seq.sampler.greedy:
+            return False
+        return seq.request.spec_len is None or seq.request.spec_len > 0
+
+    def request_spec_len(self, seq) -> int:
+        """Effective draft length for one sequence this round: per-request
+        override, stochastic-sampling opt-out, and never drafting past what
+        the request can still accept (a draft beyond ``remaining - 1`` can
+        only be wasted — the round always commits one correction token)."""
+        if not self.request_can_draft(seq):
+            return 0
+        k = self.spec_len
+        if seq.request.spec_len is not None:
+            k = seq.request.spec_len
+        return max(0, min(k, seq.remaining - 1))

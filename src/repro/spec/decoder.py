@@ -1,0 +1,410 @@
+"""SpecDecoder: draft/verify rounds for one budget row of the serving engine.
+
+Round anatomy (greedy, token-identical to target-only decoding):
+
+  1. **plan** — for every decoding sequence, reserve cache room for the
+     round. The one mandatory verify token keeps the mixed engine's
+     semantics (evict youngest block holders under pressure); everything
+     speculative — extra verify positions and draft-slot growth — is
+     opportunistic and *shrinks* instead of evicting (``k`` degrades toward
+     0, never the other way around).
+  2. **draft** — the low-rank prefix row proposes up to ``k`` tokens
+     autoregressively through the same flat-token paged forward the mixed
+     engine uses, writing the *draft* cache slot. The draft cache is warmed
+     lazily: the first draft step of each round streams whatever committed
+     tokens the draft slot is missing (``gap``), so a fresh sequence
+     (or a preemption-recomputed one — in-flight draft state is simply
+     dropped with the slots) decodes immediately at ``k = 0`` while its
+     draft cache catches up chunk by chunk.
+  3. **verify** — ONE full-row ``paged_verify_step`` scores every
+     sequence's ``k+1`` positions (last committed token + drafts); target
+     prefill chunks of not-yet-decoding sequences ride the same forward,
+     so speculation composes with chunked prefill.
+  4. **accept** — longest accepted prefix per sequence: drafts matching the
+     full row's greedy choice commit, the first mismatch is replaced by the
+     full row's own token (so every round commits >= 1 token), and both
+     cache slots roll back via ``truncate_slot`` — rejected draft tokens
+     release their blocks and rewind the write positions.
+
+Dual-slot layout: the decoder's ``PagedKVCache`` carries ``2 * max_batch``
+slots over ONE shared ``BlockAllocator`` — seat ``s`` writes target K/V at
+slot ``s`` and draft K/V at slot ``max_batch + s`` (draft and target K/V
+differ: the projections run at different ranks). Eviction always frees the
+pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.kv_cache import CacheOOM, PagedKVCache
+from repro.serving.metrics import ServingMetrics
+from repro.serving.sampling import sample_token
+from repro.serving.scheduler import Scheduler, Sequence
+
+from repro.spec.config import SpecConfig
+
+
+@dataclasses.dataclass
+class RoundPlan:
+    """One decoding sequence's reservation for the current round."""
+    seat: int                    # batcher seat == target slot id
+    seq: Sequence
+    committed: int               # L: prompt + generated tokens
+    gap_fed: int                 # draft-warmup tokens fed this round
+    k: int                       # draft proposals this round (may be 0)
+    drafts: List[int] = dataclasses.field(default_factory=list)
+
+
+class SpecDecoder:
+    """Drives one budget row's speculative continuous-batching loop.
+
+    Borrows the engine's jitted forwards (``_mixed_jit`` for draft steps,
+    ``_verify_jit`` for the full-row verify) and its finish/metrics
+    plumbing; owns the dual-slot cache discipline and the
+    longest-accepted-prefix logic.
+    """
+
+    def __init__(self, engine, *, row: int, draft_row: int, spec: SpecConfig,
+                 sched: Scheduler, metrics: ServingMetrics, results: Dict):
+        self.engine = engine
+        self.cfg = engine.cfg
+        self.row = row
+        self.draft_row = draft_row
+        self.spec = spec
+        self.sched = sched
+        self.metrics = metrics
+        self.results = results
+        self.max_batch = engine.max_batch
+        self.target_params = engine._realize(row)
+        self.draft_params = engine._realize(draft_row)
+        # 2x slots, one allocator: seat s -> target slot s, draft slot B + s
+        self.cache = PagedKVCache(
+            self.cfg, max_batch=2 * engine.max_batch, max_len=engine.max_len,
+            block_size=engine.block_size, num_blocks=engine.num_blocks)
+        self.batcher = ContinuousBatcher(engine.max_batch)
+        self._round_tables = None    # device block tables, valid per round
+        chunk = engine.prefill_chunk or engine.max_len
+        self.prefill_chunk = chunk
+        # verify-token budget per round; prefill chunks take the leftover
+        self.token_budget = engine.token_budget or (
+            engine.max_batch * (spec.spec_len + 1) + chunk)
+
+    # ------------------------------------------------------------- slots
+
+    def _draft_slot(self, seat: int) -> int:
+        return self.max_batch + seat
+
+    def _free_pair(self, seat: int) -> None:
+        """Free BOTH of a seat's cache slots (the paired-slot discipline:
+        a sequence never releases one side without the other)."""
+        self.cache.free_slot(seat)
+        self.cache.free_slot(self._draft_slot(seat))
+
+    def _block_holders(self) -> List[Sequence]:
+        """Seated sequences holding blocks in either slot of their pair."""
+        out = []
+        for seq in self.batcher.active_sequences():
+            seat = self.batcher.slot_of(seq)
+            if (self.cache.slots[seat].blocks
+                    or self.cache.slots[self._draft_slot(seat)].blocks):
+                out.append(seq)
+        return out
+
+    def _evict(self, victim: Sequence) -> int:
+        """Preempt one sequence: free both slots, drop its (implicitly
+        in-flight) draft state, re-queue at the row front for recompute."""
+        seat = self.batcher.slot_of(victim)
+        self.batcher.leave(seat)
+        self._free_pair(seat)
+        self.sched.requeue_front(victim)
+        self.metrics.on_preempt(victim.req_id)
+        return seat
+
+    # -------------------------------------------------------------- loop
+
+    def serve(self) -> None:
+        eng, sched = self.engine, self.sched
+        while True:
+            # admission: seat waiting requests with a slot PAIR each
+            for seat in self.batcher.free_slots():
+                if not sched.has_waiting(self.row):
+                    break
+                seq = sched.pop(self.row)
+                self.metrics.on_admit(seq.req_id)
+                if seq.request.max_new_tokens <= 0:
+                    eng._finish(seq, self.metrics, self.results)
+                    continue
+                if seq.prompt_len > eng.max_len:
+                    raise CacheOOM(f"sequence of {seq.prompt_len} tokens "
+                                   f"exceeds max_len {eng.max_len}")
+                self.cache.open_slot(seat)
+                self.cache.open_slot(self._draft_slot(seat))
+                self.batcher.seat_prefill(seat, seq)
+            if self.batcher.num_active == 0:
+                break                            # row drained
+
+            plans = self._plan_round()
+            chunks = self._plan_prefill(plans)
+            if not plans and not chunks:
+                if self.batcher.num_active == 0:
+                    continue                     # everyone was preempted
+                self._unstick()
+                continue
+
+            # every block the round touches was reserved during planning,
+            # so one table snapshot serves all k+1 dispatches (host-side:
+            # the jitted forwards donate their cache operand, so a device
+            # copy could not be reused across dispatches)
+            self._round_tables = self.cache.host_tables(
+                self.cache.active_max_blocks(), null_rows=1)
+            self._draft_phase(plans)
+            self._verify_and_commit(plans, chunks)
+            self._round_tables = None
+
+    # ----------------------------------------------------------- planning
+
+    def _reserve_mandatory(self, seat: int) -> bool:
+        """Guarantee the seat's one mandatory verify token, evicting the
+        youngest block holder under pressure (mixed-engine semantics).
+        Returns False if the seat's own sequence got evicted."""
+        while self.cache.extend_slot(seat, 1, clip=True) == 0:
+            victim = Scheduler.pick_victim(self._block_holders())
+            if (victim is self.batcher.slots[seat]
+                    and self.batcher.num_active == 1):
+                raise CacheOOM(
+                    f"sequence {victim.req_id} alone exceeds the pool")
+            if self._evict(victim) == seat:
+                return False                     # the seat itself went
+        return True
+
+    def _plan_round(self) -> List[RoundPlan]:
+        plans: List[RoundPlan] = []
+        decode_seats = self.batcher.decode_slots()
+        # token-budget accounting: mandatory verify tokens are the decode
+        # reserve (like the mixed engine's one-per-slot); speculative
+        # EXTRAS consume what remains after keeping one prefill chunk's
+        # worth for seated prefills — a small explicit token_budget throttles
+        # speculation rather than starving prefill behind it
+        extras_left = self.token_budget - len(decode_seats)
+        if self.batcher.prefill_slots():
+            extras_left -= min(self.prefill_chunk,
+                               self.engine.max_len)
+        for seat in decode_seats:
+            seq = self.batcher.slots[seat]
+            if seq is None or seq.state != "decoding":
+                continue                         # evicted while reserving
+            committed = seq.prompt_len + len(seq.generated)
+            tgt = self.cache.slots[seat]
+            assert tgt.num_tokens == committed - 1, (tgt.num_tokens, committed)
+            if not self._reserve_mandatory(seat):
+                continue
+
+            dslot = self._draft_slot(seat)
+            gap = committed - self.cache.slots[dslot].num_tokens
+            assert gap >= 1, gap
+            want_k = self.spec.request_spec_len(seq)
+            if gap > self.spec.gap_chunk:
+                want_k = 0                       # still warming the draft
+            # speculation degrades under pressure, it never evicts: clamp
+            # to the round's extras budget and the max_len headroom
+            # (extend_slot raises past max_len even with clip), then clip
+            # to the free list
+            want_k = max(0, min(want_k, extras_left))
+            want_k = min(want_k,
+                         self.engine.max_len - self.cache.slots[seat].num_tokens)
+            # opportunistic verify room beyond the mandatory token
+            k = self.cache.extend_slot(seat, want_k, clip=True)
+            # draft slot: gap feed + the k-1 proposal writes, clip-only;
+            # a sequence that can never draft (stochastic sampler,
+            # spec_len=0 opt-out) skips warmup entirely — its draft slot
+            # stays blockless and no draft-row forward runs for it
+            fed = (min(gap, self.spec.gap_chunk)
+                   if self.spec.request_can_draft(seq) else 0)
+            head = self.engine.max_len - self.cache.slots[dslot].num_tokens
+            if fed > head:
+                fed, k = head, 0
+            if k > 0:
+                k = min(k, head - fed + 1)
+            need = fed + max(0, k - 1)
+            got = self.cache.extend_slot(dslot, need, clip=True)
+            if got < need:
+                if k > 0 and got >= fed:
+                    k = got - fed + 1            # fewer proposals fit
+                else:
+                    fed, k = got, 0              # partial warmup only
+            # release verify room we are no longer going to use
+            self.cache.truncate_slot(seat, committed + k)
+            extras_left -= k
+            plans.append(RoundPlan(seat=seat, seq=seq, committed=committed,
+                                   gap_fed=fed, k=k))
+        # a later seat's mandatory reservation may have evicted an earlier
+        # planned sequence — its plan (and reservations) went with it
+        return [p for p in plans if self.batcher.slots[p.seat] is p.seq]
+
+    def _plan_prefill(self, plans: List[RoundPlan]):
+        """Target-side prefill chunks riding the verify forward, under the
+        leftover token budget (verify tokens are reserved first — drafts
+        never starve running decodes, and decodes never starve prefill
+        below the budget the mixed engine would give it)."""
+        spent = sum(p.k + 1 for p in plans)
+        budget_left = self.token_budget - spent
+        prefilling = [self.batcher.slots[s]
+                      for s in self.batcher.prefill_slots()]
+        chunks = []
+        for seq, want in Scheduler.plan_prefill_chunks(
+                prefilling, budget_left, self.prefill_chunk,
+                order=self.engine.prefill_order):
+            seat = self.batcher.slot_of(seq)
+            got = self.cache.extend_slot(seat, want, clip=True)
+            if got:
+                chunks.append((seat, seq, seq.prefill_pos, got))
+        return chunks
+
+    def _unstick(self) -> None:
+        holders = self._block_holders()
+        assert holders, "stuck with no block holders"
+        if self.batcher.num_active == 1:
+            raise CacheOOM(f"sequence {holders[0].req_id} alone exceeds "
+                           "the pool")
+        self._evict(Scheduler.pick_victim(holders))
+
+    # ------------------------------------------------------------ forward
+
+    def _bucket(self, used: int) -> int:
+        return self.engine._bucket_tokens(used, self.token_budget)
+
+    def _dispatch(self, fn, params, entries):
+        """Run one flat-token forward. ``entries``: (slot, tokens, start)
+        triples — ``tokens`` land at positions ``start..start+n-1`` of
+        ``slot`` (the engine's shared ``_pack_flat`` layout). Returns the
+        (T_padded, V) logits as a device array."""
+        used = sum(len(t) for _, t, _ in entries)
+        width = self._bucket(used)
+        tok, sid, pos = self.engine._pack_flat(entries, width,
+                                               2 * self.max_batch)
+        caches = {
+            "slot_ids": jnp.asarray(sid),
+            "positions": jnp.asarray(pos),
+            "block_tables": jnp.asarray(self._round_tables),
+            "segments": self.cache.pools,
+        }
+        logits, new_caches = fn(params, caches, jnp.asarray(tok[None]))
+        self.cache.update_pools(new_caches)
+        return logits[0]            # device array: callers argmax on device
+
+    def _draft_phase(self, plans: List[RoundPlan]) -> None:
+        """Autoregressive draft proposals (+ lazy draft-cache warmup)."""
+        eng = self.engine
+        # step 1: per sequence, the committed tokens its draft cache lacks
+        entries, emitters = [], []
+        for p in plans:
+            if p.gap_fed == 0:
+                continue
+            committed = (list(map(int, p.seq.request.prompt))
+                         + p.seq.generated)
+            dslot = self._draft_slot(p.seat)
+            # planning already extended the draft slot by gap_fed (+ k-1),
+            # so the feed starts at its previous write position
+            start = (self.cache.slots[dslot].num_tokens
+                     - p.gap_fed - max(0, p.k - 1))
+            toks = committed[start: start + p.gap_fed]
+            entries.append((dslot, toks, start))
+            if p.k > 0:
+                emitters.append((p, len(entries) - 1))
+        if not entries:
+            return
+        flat_end = np.cumsum([len(t) for _, t, _ in entries]) - 1
+        logits = self._dispatch(eng._mixed_jit, self.draft_params, entries)
+        greedy = np.asarray(jnp.argmax(logits, axis=-1))
+        for p, ei in emitters:
+            p.drafts.append(int(greedy[flat_end[ei]]))
+
+        # steps 2..k: one proposal per participating sequence per step
+        max_k = max((p.k for p in plans), default=0)
+        for step in range(2, max_k + 1):
+            live = [p for p in plans if p.k >= step]
+            entries = [(self._draft_slot(p.seat), [p.drafts[-1]],
+                        p.committed + step - 2) for p in live]
+            logits = self._dispatch(eng._mixed_jit, self.draft_params,
+                                    entries)
+            greedy = np.asarray(jnp.argmax(logits, axis=-1))
+            for i, p in enumerate(live):
+                p.drafts.append(int(greedy[i]))
+
+    # ----------------------------------------------------------- commit
+
+    def _verify_and_commit(self, plans: List[RoundPlan], chunks) -> None:
+        eng, metrics = self.engine, self.metrics
+        entries = []
+        for p in plans:
+            feed = self.batcher.next_token(p.seat)
+            entries.append((p.seat, [feed] + p.drafts, p.committed - 1))
+        for seat, seq, start, n in chunks:
+            toks = list(map(int, seq.request.prompt[start: start + n]))
+            entries.append((seat, toks, start))
+        logits = self._dispatch(eng._verify_jit, self.target_params, entries)
+        greedy = np.asarray(jnp.argmax(logits, axis=-1))
+
+        # longest-accepted-prefix per sequence
+        flat = 0
+        drafted = verified = accepted_total = committed_total = 0
+        drafting_seqs = sum(1 for p in plans if p.k > 0)
+        for p in plans:
+            run = p.k + 1
+            targets = [int(greedy[flat + j]) for j in range(run)]
+            if not p.seq.sampler.greedy:
+                targets[0] = sample_token(p.seq, logits[flat])
+            flat += run
+            m = 0
+            while m < p.k and p.drafts[m] == targets[m]:
+                m += 1
+            commit = targets[: m + 1][: p.seq.remaining]
+            drafted += p.k
+            verified += run
+            accepted_total += m
+            committed_total += len(commit)
+            p.seq.generated.extend(commit)
+            for _ in commit:
+                metrics.on_token(p.seq.req_id)
+            if p.seq.done:
+                self.batcher.leave(p.seat)
+                self._free_pair(p.seat)
+                eng._finish(p.seq, metrics, self.results)
+                continue
+            # rollback: rejected verify room and rejected draft tail
+            self.cache.truncate_slot(p.seat, p.committed + m)
+            dslot = self._draft_slot(p.seat)
+            if p.k > 0:
+                self.cache.truncate_slot(
+                    dslot, min(p.committed + m, p.committed + p.k - 1))
+            self.batcher.feed(p.seat, commit[-1])
+
+        # prefill chunks commit exactly as in the mixed engine
+        total_chunk = 0
+        for seat, seq, start, n in chunks:
+            seq.prefill_pos = start + n
+            total_chunk += n
+            metrics.on_prefill_chunk(n)
+            if seq.prefill_pos == seq.prompt_len:
+                metrics.on_prefill_end(seq.req_id)
+                first = sample_token(seq, logits[flat + n - 1])
+                seq.generated.append(first)
+                metrics.on_first_token(seq.req_id)
+                if seq.done:                     # max_new_tokens == 1
+                    self.batcher.leave(seat)
+                    self._free_pair(seat)
+                    eng._finish(seq, metrics, self.results)
+                else:
+                    self.batcher.to_decoding(seat, first)
+            flat += n
+
+        metrics.on_mixed_step(committed_total, total_chunk,
+                              self.cache.occupancy())
+        if plans:
+            metrics.on_spec_round(drafted, verified, accepted_total,
+                                  drafting_seqs)

@@ -238,6 +238,43 @@ def test_plan_prefill_chunks_env_matrix_chunk():
         assert [s.req_id for s, _ in plan] == sorted(s.req_id for s, _ in plan)
 
 
+def test_plan_prefill_chunks_srpf_order():
+    """SRPF budgets the sequence closest to finishing its prompt first;
+    ties break by admission order; FIFO stays the default."""
+    a, b, c = _seq(0, 20), _seq(1, 12), _seq(2, 20)
+    b.prefill_pos = 8                            # remaining 4 — shortest
+    c.prefill_pos = 10                           # remaining 10
+    plan = Scheduler.plan_prefill_chunks([a, b, c], budget=10, chunk=8,
+                                         order="srpf")
+    assert plan == [(b, 4), (c, 6)]              # shortest first, then budget
+    assert Scheduler.plan_prefill_chunks([a, b, c], budget=10,
+                                         chunk=8) == [(a, 8), (b, 2)]
+    d, e = _seq(3, 8), _seq(4, 8)                # equal remaining: FIFO tie
+    assert Scheduler.plan_prefill_chunks([e, d], budget=8, chunk=8,
+                                         order="srpf") == [(d, 8)]
+    with pytest.raises(ValueError, match="prefill order"):
+        Scheduler.plan_prefill_chunks([a], 8, 8, order="weird")
+
+
+def test_srpf_prioritizes_short_prompts_and_stays_exact(smoke_state):
+    """Scheduler invariant under ``prefill_order='srpf'``: a short prompt
+    admitted last still finishes prefilling first, and every request's
+    tokens stay identical to the drain baseline (ordering only reshuffles
+    which chunks share an iteration, never what a sequence attends to)."""
+    eng = _mk_engine(smoke_state, max_batch=3, prefill_chunk=8,
+                     prefill_order="srpf")
+    reqs = _requests(eng.cfg, [(40, 2, 1.0), (40, 2, 1.0), (8, 2, 1.0)])
+    res = eng.generate(reqs, mode="continuous")
+    tr = eng.last_metrics.traces
+    assert tr[2].prefill_end_t <= tr[0].prefill_end_t
+    assert tr[2].prefill_end_t <= tr[1].prefill_end_t
+    for i, rq in enumerate(reqs):
+        np.testing.assert_array_equal(res[i].tokens,
+                                      eng.generate_drain([rq])[0].tokens)
+    with pytest.raises(ValueError, match="prefill_order"):
+        _mk_engine(smoke_state, prefill_chunk=4, prefill_order="lifo")
+
+
 def test_pick_victim_youngest_first_includes_mid_prefill():
     old_decode = _seq(3, 8, state="decoding")
     young_prefill = _seq(7, 8, state="prefilling", prefill_pos=5)

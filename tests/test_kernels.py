@@ -161,6 +161,33 @@ def test_paged_prefill_reduces_to_decode_and_respects_window():
         np.testing.assert_array_equal(np.asarray(y_dec), np.asarray(y_pre))
 
 
+@pytest.mark.parametrize("hq,hkv,d,bs,mb", [(5, 5, 24, 3, 4),
+                                            (12, 4, 40, 7, 3)])
+def test_paged_verify_runs_parity_nontile_shapes(hq, hkv, d, bs, mb):
+    """Speculative-verify layout through the chunked-prefill kernel: each
+    sequence contributes a run of k+1 tokens at the TAIL of its context
+    (positions L-1..L+k-1, strictly ascending per-token context lengths) —
+    the shape ``paged_verify_step`` dispatches. Head counts / head dims /
+    block sizes sit off the TPU (8, 128) tile, so interpret mode must stay
+    exact with only the ops.py padding contract in between."""
+    b, k = 3, 3
+    kp, vp, tables = _paged_pools(b, hkv, d, bs, mb, jnp.float32)
+    run = k + 1
+    q = jnp.asarray(RNG.standard_normal((b * run, hq, d)).astype(np.float32))
+    sid = jnp.asarray(np.repeat(np.arange(b, dtype=np.int32), run))
+    lens = []
+    for _ in range(b):
+        first = int(RNG.integers(1, mb * bs - run + 1))
+        lens.extend(range(first, first + run))
+    lens = jnp.asarray(np.asarray(lens, np.int32))
+    y_ref = ops.paged_prefill_attention_forward(q, kp, vp, tables, sid, lens,
+                                                use_pallas=False)
+    y_ker = ops.paged_prefill_attention_forward(q, kp, vp, tables, sid, lens,
+                                                use_pallas="interpret")
+    err = float(jnp.abs(y_ref - y_ker).max())
+    assert err < 2e-5, (err, (hq, hkv, d, bs, mb))
+
+
 def test_paged_prefill_intra_chunk_causality():
     """A chunk's tokens see strictly growing contexts: writing garbage past
     each token's context must not change its output (causality within the

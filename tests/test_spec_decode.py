@@ -1,0 +1,438 @@
+"""Hardening suite for nested self-speculative decoding.
+
+Covers the draft/verify subsystem end to end:
+
+  * token-identity matrix — speculative greedy output must be bit-identical
+    to the drain baseline and the non-speculative continuous engine across
+    draft ranks x draft lengths x block-boundary prompts x chunked prefill
+    x mid-round preemption (recompute drops in-flight draft state);
+  * dual-slot cache discipline — ``truncate_slot`` rollback unit tests and
+    a paired-slot allocator walk (hypothesis stateful machine when
+    installed, always-on seeded fallback): a sequence holding a draft +
+    target slot pair can never leak blocks, however rounds interleave with
+    preemption;
+  * draft-row resolution — ``nested_prefix_row`` prefix/budget semantics;
+  * metrics — acceptance rate, mean accepted length, per-round
+    draft/verify token counts.
+
+``REPRO_SPEC_LEN`` (CI matrix knob) injects one extra draft length into the
+parametrized sweeps.
+"""
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import flexrank as FR
+from repro.serving import (CacheOOM, ElasticEngine, PagedKVCache, Request,
+                           SamplingParams, SpecConfig)
+
+try:
+    from hypothesis import settings
+    from hypothesis import strategies as st
+    from hypothesis.stateful import RuleBasedStateMachine, invariant, rule
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+BLOCK = 8
+SPEC_LENS = [1, 3]
+_env_k = os.environ.get("REPRO_SPEC_LEN")
+if _env_k and int(_env_k) not in SPEC_LENS:
+    SPEC_LENS.append(int(_env_k))
+
+# prompts straddle block-size-8 boundaries; max_new covers the one-token
+# edge, multi-round decodes, and a budget below the top row (which may
+# serve un-speculatively when no smaller prefix row exists)
+IDENTITY_SPEC = [(7, 6, 1.0), (8, 3, 0.4), (9, 7, 1.0), (17, 2, 0.7),
+                 (4, 1, 1.0), (12, 11, 1.0)]
+
+
+@pytest.fixture(scope="module")
+def smoke_state():
+    from repro.data import make_source
+    from repro.launch.train import build_flexrank_state
+    from repro.models import common as cm
+    from repro.models import transformer as tfm
+    cfg = get_config("gpt2-small", smoke=True)
+    source = make_source(cfg.vocab_size, 64, 4, seed=0)
+    dense = cm.instantiate(tfm.model_spec(cfg), jax.random.PRNGKey(0))
+    params_fact, table, infos = build_flexrank_state(cfg, dense, source)
+    return cfg, params_fact, table, infos
+
+
+def _mk_engine(state, **kw):
+    cfg, params_fact, table, infos = state
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("block_size", BLOCK)
+    return ElasticEngine(cfg, params_fact, table, infos, **kw)
+
+
+def _requests(cfg, spec, seed=7, **req_kw):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, pl).astype(np.int32),
+                    max_new_tokens=mn, budget=b, **req_kw)
+            for pl, mn, b in spec]
+
+
+@pytest.fixture(scope="module")
+def identity_baselines(smoke_state):
+    cfg = smoke_state[0]
+    reqs = _requests(cfg, IDENTITY_SPEC)
+    eng = _mk_engine(smoke_state)
+    return reqs, [eng.generate_drain([r])[0].tokens for r in reqs]
+
+
+# ------------------------------------------------- token-identity matrix
+
+@pytest.mark.parametrize("spec_len", SPEC_LENS)
+@pytest.mark.parametrize("draft_rank", [0.5, 0.9])
+def test_spec_token_identity_matrix(smoke_state, identity_baselines,
+                                    spec_len, draft_rank):
+    """Greedy speculative decoding must be bit-identical to the drain
+    baseline for every (draft rank, k), with prompts straddling block
+    boundaries and mixed budget rows (6 requests, 2 seats)."""
+    reqs, drain = identity_baselines
+    eng = _mk_engine(smoke_state,
+                     spec=SpecConfig(draft_rank=draft_rank, spec_len=spec_len))
+    res = eng.generate(reqs, mode="continuous")
+    for i, rq in enumerate(reqs):
+        assert len(res[i].tokens) == len(rq.prompt) + rq.max_new_tokens
+        np.testing.assert_array_equal(res[i].tokens, drain[i])
+    m = eng.last_metrics.summary()
+    assert m["generated_tokens"] == sum(mn for _, mn, _ in IDENTITY_SPEC)
+    # a draft_rank the cost table cannot satisfy (no prefix row below the
+    # target fits) must disable speculation transparently, not break output
+    engaged = any(eng.spec_draft_row(r.budget_row) is not None for r in res)
+    assert (m["spec_rounds"] > 0) == engaged
+    assert m["spec_draft_tokens"] >= m["spec_accepted_tokens"]
+
+
+@pytest.mark.parametrize("spec_len", [2] + (
+    [int(_env_k)] if _env_k and _env_k != "2" else []))
+def test_spec_identity_with_chunked_prefill(smoke_state, identity_baselines,
+                                            spec_len):
+    """Speculation composes with chunked prefill: prompt chunks ride the
+    verify forward and the result stays exact."""
+    reqs, drain = identity_baselines
+    eng = _mk_engine(smoke_state, prefill_chunk=4,
+                     spec=SpecConfig(draft_rank=0.9, spec_len=spec_len,
+                                     gap_chunk=4))
+    res = eng.generate(reqs, mode="continuous")
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(res[i].tokens, drain[i])
+
+
+def test_spec_identity_under_mid_round_preemption(smoke_state):
+    """Tight pool, two sequences each holding a draft + target slot pair:
+    preemption mid-round must drop in-flight draft state, free BOTH slots,
+    and recompute token-identically."""
+    eng = _mk_engine(smoke_state, max_len=32, block_size=4, num_blocks=9,
+                     spec=SpecConfig(draft_rank=0.9, spec_len=3, gap_chunk=8))
+    reqs = _requests(eng.cfg, [(12, 6, 1.0), (12, 6, 1.0)])
+    res = eng.generate(reqs, mode="continuous")
+    m = eng.last_metrics
+    assert m.preemptions >= 1
+    for i, rq in enumerate(reqs):
+        np.testing.assert_array_equal(res[i].tokens,
+                                      eng.generate_drain([rq])[0].tokens)
+
+
+def test_spec_per_request_opt_out_and_stochastic_k0(smoke_state):
+    """``Request.spec_len=0`` disables drafting for that request, and
+    stochastic requests run verify-only (k = 0) — both stay exact
+    (stochastic vs the same sampler stream on the non-spec engine)."""
+    cfg = smoke_state[0]
+    greedy_opt_out = _requests(cfg, [(9, 5, 1.0)], spec_len=0)
+    sampled = _requests(cfg, [(7, 5, 1.0)], seed=9,
+                        sampling=SamplingParams(temperature=0.8, seed=3))
+    reqs = greedy_opt_out + sampled
+    eng = _mk_engine(smoke_state, spec=SpecConfig(draft_rank=0.9, spec_len=3))
+    res = eng.generate(reqs, mode="continuous")
+    base = _mk_engine(smoke_state)
+    ref = base.generate(_requests(cfg, [(9, 5, 1.0)], spec_len=0)
+                        + _requests(cfg, [(7, 5, 1.0)], seed=9,
+                                    sampling=SamplingParams(temperature=0.8,
+                                                            seed=3)),
+                        mode="continuous")
+    for a, b in zip(res, ref):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    # nobody drafted: one request opted out, the other is stochastic
+    assert eng.last_metrics.summary()["spec_draft_tokens"] == 0
+
+
+def test_spec_pallas_matches_oracle_engine(smoke_state):
+    """Verify path through the Pallas chunked-prefill kernel (interpret
+    mode) produces the same tokens as the jnp oracle."""
+    eng_ref = _mk_engine(smoke_state, max_len=32, block_size=4,
+                         spec=SpecConfig(draft_rank=0.9, spec_len=2))
+    eng_ker = _mk_engine(smoke_state, max_len=32, block_size=4,
+                         spec=SpecConfig(draft_rank=0.9, spec_len=2),
+                         use_pallas="interpret")
+    reqs = _requests(eng_ref.cfg, [(5, 4, 1.0), (9, 5, 1.0)])
+    r1 = eng_ref.generate(reqs, mode="continuous")
+    r2 = eng_ker.generate(reqs, mode="continuous")
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_spec_metrics_round_log(smoke_state):
+    eng = _mk_engine(smoke_state, spec=SpecConfig(draft_rank=0.9, spec_len=3))
+    reqs = _requests(eng.cfg, [(6, 8, 1.0), (9, 4, 1.0)])
+    eng.generate(reqs, mode="continuous")
+    m = eng.last_metrics
+    s = m.summary()
+    assert s["spec_rounds"] == len(m.spec_round_log) > 0
+    for drafted, verified, accepted, drafting in m.spec_round_log:
+        assert 0 <= accepted <= drafted
+        assert verified >= drafted  # each drafting seq adds 1 feed token
+        assert drafted <= drafting * eng.spec.spec_len
+    assert 0.0 <= s["spec_acceptance_rate"] <= 1.0
+    assert s["spec_mean_accepted_len"] <= eng.spec.spec_len
+
+
+def test_spec_sequence_filling_max_len_exactly(smoke_state):
+    """prompt + max_new == max_len: speculative extends must clamp to the
+    max_len headroom (degrade k, never raise) and the sequence completes
+    token-identically."""
+    eng = _mk_engine(smoke_state, max_len=16, block_size=4,
+                     spec=SpecConfig(draft_rank=0.9, spec_len=4))
+    reqs = _requests(eng.cfg, [(10, 6, 1.0), (4, 12, 1.0)])
+    res = eng.generate(reqs, mode="continuous")
+    for i, rq in enumerate(reqs):
+        assert len(res[i].tokens) == len(rq.prompt) + rq.max_new_tokens
+        np.testing.assert_array_equal(res[i].tokens,
+                                      eng.generate_drain([rq])[0].tokens)
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="draft_rank"):
+        SpecConfig(draft_rank=0.0)
+    with pytest.raises(ValueError, match="spec_len"):
+        SpecConfig(draft_rank=0.5, spec_len=0)
+    with pytest.raises(ValueError, match="gap_chunk"):
+        SpecConfig(draft_rank=0.5, gap_chunk=0)
+
+
+def test_paged_verify_step_matches_mixed_step(smoke_state):
+    """``paged_verify_step`` is the documented verify entry point; it must
+    be numerically the mixed-step computation (the engine relies on that to
+    share one jit cache between the two paths)."""
+    import jax.numpy as jnp
+    from repro.core import flexrank as FR
+    from repro.models import transformer as tfm
+    cfg, params_fact, table, infos = smoke_state
+    params = FR.gar_deploy(params_fact, cfg, infos, table,
+                           table.table.shape[0] - 1)
+    cache = PagedKVCache(cfg, max_batch=2, max_len=16, block_size=4)
+    cache.open_slot(0)
+    cache.extend_slot(0, 6)                    # a 6-token verify run
+    rng = np.random.default_rng(0)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)).astype(np.int32))
+
+    def mk_caches():
+        sid = np.full(8, 2, np.int32)          # pads -> null row
+        sid[:6] = 0
+        pos = np.zeros(8, np.int32)
+        pos[:6] = np.arange(6)
+        return {"slot_ids": jnp.asarray(sid), "positions": jnp.asarray(pos),
+                "block_tables": cache.device_tables(null_rows=1),
+                "segments": cache.pools}
+
+    lv, _ = tfm.paged_verify_step(params, cfg, mk_caches(), tok)
+    lm, _ = tfm.paged_mixed_step(params, cfg, mk_caches(), tok)
+    np.testing.assert_array_equal(np.asarray(lv), np.asarray(lm))
+
+
+# ------------------------------------------------- draft-row resolution
+
+def test_nested_prefix_row_semantics(smoke_state):
+    _, _, table, _ = smoke_state
+    top = table.table.shape[0] - 1
+    # bottom row has no strictly smaller prefix row
+    assert FR.nested_prefix_row(table, 0, 1.0) is None
+    row = FR.nested_prefix_row(table, top, 1.0)
+    assert row == top - 1                      # largest strict prefix
+    tiny = FR.nested_prefix_row(table, top, 1e-9)
+    assert tiny is None                        # budget excludes everything
+    for r in range(top):
+        assert FR.is_nested_prefix(table, r, top)
+    # resolved rows respect the budget cap
+    cost = table.table.sum(axis=1)
+    for budget in (0.5, 0.7, 0.9):
+        row = FR.nested_prefix_row(table, top, budget)
+        if row is not None:
+            assert cost[row] <= budget * cost[-1] + 1e-6
+            assert row < top
+
+
+def test_engine_spec_draft_row_resolution(smoke_state):
+    eng = _mk_engine(smoke_state, spec=SpecConfig(draft_rank=0.9, spec_len=2))
+    top = eng.table.table.shape[0] - 1
+    assert eng.spec_draft_row(0) is None       # bottom row: no prefix row
+    drow = eng.spec_draft_row(top)
+    assert drow is not None and drow < top
+    assert _mk_engine(smoke_state).spec_draft_row(top) is None  # spec unset
+
+
+# ------------------------------------- dual-slot cache rollback + leaks
+
+CFG_TINY = get_config("gpt2-small", smoke=True)
+CACHE_KW = dict(max_batch=4, max_len=16, block_size=2, num_blocks=12)
+PAIRS = CACHE_KW["max_batch"] // 2
+
+
+def _check_cache_invariants(cache: PagedKVCache):
+    alloc = cache.allocator
+    held = [b for s in cache.slots if s is not None for b in s.blocks]
+    assert len(held) == len(set(held))
+    assert 0 not in held
+    assert alloc.free_count + len(held) == alloc.num_blocks - 1
+    for slot, s in enumerate(cache.slots):
+        tbl = cache._tables[slot]
+        if s is None:
+            assert not tbl.any()
+            continue
+        assert s.num_tokens <= len(s.blocks) * cache.block_size
+        assert list(tbl[: len(s.blocks)]) == s.blocks
+        assert not tbl[len(s.blocks):].any()
+
+
+def test_truncate_slot_rollback():
+    cache = PagedKVCache(CFG_TINY, max_batch=2, max_len=16, block_size=4)
+    cache.open_slot(0)
+    cache.extend_slot(0, 10)                   # 3 blocks
+    free0 = cache.allocator.free_count
+    assert cache.truncate_slot(0, 5) == 1      # 10 -> 5 tokens: drop block 3
+    assert cache.slots[0].num_tokens == 5
+    assert len(cache.slots[0].blocks) == 2
+    assert cache.allocator.free_count == free0 + 1
+    _check_cache_invariants(cache)
+    assert cache.truncate_slot(0, 5) == 0      # idempotent at boundary
+    assert cache.truncate_slot(0, 0) == 2      # full rewind keeps the seat
+    assert cache.slots[0] is not None and cache.slots[0].blocks == []
+    cache.extend_slot(0, 3)                    # the seat is still usable
+    assert cache.slots[0].num_tokens == 3
+    with pytest.raises(AssertionError):
+        cache.truncate_slot(0, 99)             # cannot truncate upward
+    _check_cache_invariants(cache)
+
+
+def _paired_cache_walk(seed, steps=300):
+    """Random walk over PAIRED slots: seat s owns slots (s, PAIRS + s) like
+    the spec decoder; alloc/extend/truncate interleave with paired frees
+    (= preemption). Blocks must be conserved throughout."""
+    rng = np.random.default_rng(seed)
+    cache = PagedKVCache(CFG_TINY, **CACHE_KW)
+    for _ in range(steps):
+        op = rng.integers(0, 5)
+        seat = int(rng.integers(0, PAIRS))
+        tgt, drf = seat, PAIRS + seat
+        try:
+            if op == 0 and cache.slots[tgt] is None:
+                cache.open_slot(tgt)
+                cache.open_slot(drf)            # pairs open together
+            elif cache.slots[tgt] is None:
+                continue
+            elif op == 1:
+                cache.extend_slot(int(rng.choice([tgt, drf])),
+                                  int(rng.integers(1, 5)),
+                                  clip=bool(rng.integers(0, 2)))
+            elif op == 2:
+                slot = int(rng.choice([tgt, drf]))
+                st = cache.slots[slot]
+                cache.truncate_slot(slot, int(rng.integers(0, st.num_tokens + 1)))
+            elif op == 3:
+                cache.append_token(int(rng.choice([tgt, drf])))
+            elif op == 4:                       # preemption frees the PAIR
+                cache.free_slot(tgt)
+                cache.free_slot(drf)
+        except CacheOOM:
+            pass
+        _check_cache_invariants(cache)
+    for seat in range(PAIRS):                   # drain
+        if cache.slots[seat] is not None:
+            cache.free_slot(seat)
+            cache.free_slot(PAIRS + seat)
+    assert cache.allocator.free_count == cache.allocator.num_blocks - 1
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_paired_slots_conserve_blocks(seed):
+    _paired_cache_walk(seed)
+
+
+if HAVE_HYPOTHESIS:
+
+    class PairedCacheMachine(RuleBasedStateMachine):
+        """Stateful property test for the spec decoder's cache discipline:
+        paired claims/frees, chunked growth on either side, and
+        ``truncate_slot`` rollback keep the allocator consistent."""
+
+        def __init__(self):
+            super().__init__()
+            self.cache = PagedKVCache(CFG_TINY, **CACHE_KW)
+
+        seats = st.integers(0, PAIRS - 1)
+        sides = st.booleans()
+
+        def _slot(self, seat, draft):
+            return PAIRS + seat if draft else seat
+
+        @rule(seat=seats)
+        def open_pair(self, seat):
+            if self.cache.slots[seat] is None:
+                self.cache.open_slot(seat)
+                self.cache.open_slot(PAIRS + seat)
+
+        @rule(seat=seats, draft=sides, n=st.integers(1, 6), clip=st.booleans())
+        def extend(self, seat, draft, n, clip):
+            slot = self._slot(seat, draft)
+            st_ = self.cache.slots[slot]
+            if st_ is None or st_.num_tokens + n > self.cache.max_len:
+                return
+            if clip:
+                got = self.cache.extend_slot(slot, n, clip=True)
+                assert 0 <= got <= n
+            else:
+                try:
+                    assert self.cache.extend_slot(slot, n) == n
+                except CacheOOM:
+                    pass
+
+        @rule(seat=seats, draft=sides, frac=st.floats(0.0, 1.0))
+        def truncate(self, seat, draft, frac):
+            slot = self._slot(seat, draft)
+            st_ = self.cache.slots[slot]
+            if st_ is None:
+                return
+            keep = int(frac * st_.num_tokens)
+            freed = self.cache.truncate_slot(slot, keep)
+            assert freed >= 0
+            assert self.cache.slots[slot].num_tokens == keep
+
+        @rule(seat=seats)
+        def free_pair(self, seat):
+            if self.cache.slots[seat] is not None:
+                self.cache.free_slot(seat)
+                self.cache.free_slot(PAIRS + seat)
+
+        @invariant()
+        def consistent(self):
+            _check_cache_invariants(self.cache)
+            # the pairing discipline itself: both sides seated or neither
+            for seat in range(PAIRS):
+                assert ((self.cache.slots[seat] is None)
+                        == (self.cache.slots[PAIRS + seat] is None))
+
+    PairedCacheMachine.TestCase.settings = settings(
+        max_examples=25, stateful_step_count=40, deadline=None)
+    TestPairedCacheMachine = PairedCacheMachine.TestCase
+
+else:
+
+    def test_paired_cache_machine_requires_hypothesis():
+        pytest.skip("hypothesis not installed (optional dev extra)")
