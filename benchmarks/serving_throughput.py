@@ -9,11 +9,13 @@ Two workloads:
     longest member while continuous batching back-fills freed slots at
     iteration granularity (PR-1 acceptance: continuous beats drain).
   * ``long/short`` — a few long prompts interleaved with many short ones,
-    all slots available up front; the regime where the PR-1 continuous
-    engine's batch-1 full-prompt prefills serialize time-to-first-token,
-    while chunked prefill packs prompt chunks and running decodes into one
-    fused forward per iteration (PR-2 acceptance: mean TTFT cut >= 1.5x at
-    equal-or-better tokens/s).
+    all slots available up front; the regime where full-prompt prefills
+    serialize time-to-first-token, while chunked prefill packs prompt
+    chunks and running decodes into one fused forward per iteration. The
+    baseline engine (no ``prefill_chunk``) now runs the PR-4 deprecation
+    shim — whole prompts as single chunks through the same mixed loop —
+    so the TTFT gap vs the retired PR-1 batch-1-prefill engine (PR-2
+    measured ~3.4x) narrows to what chunk granularity alone buys.
 
 Derived columns: tokens/s per engine, the continuous/drain speedup, and the
 chunked-vs-continuous TTFT ratio with its queue/prefill breakdown.
@@ -131,9 +133,13 @@ def main():
           f"first-decode {sk['ttft_first_decode_mean_s']*1e3:.1f} ms "
           f"({sk['mixed_iterations']} mixed iterations, "
           f"chunk={PREFILL_CHUNK})")
-    if ttft_ratio < 1.5:
-        print(f"# WARNING: chunked prefill TTFT cut {ttft_ratio:.2f}x < 1.5x "
-              "acceptance target")
+    # the original 1.5x PR-2 target was measured against the retired PR-1
+    # batch-1-prefill engine; against the full-prompt *shim* (which already
+    # fuses whole prompts into mixed iterations) chunking must simply not
+    # lose TTFT
+    if ttft_ratio < 1.0:
+        print(f"# WARNING: chunked prefill TTFT cut {ttft_ratio:.2f}x < 1.0x "
+              "vs the full-prompt shim baseline")
     if tps_k < tps_b * 0.95:
         print(f"# WARNING: chunked ({tps_k:.1f} tok/s) fell behind "
               f"continuous ({tps_b:.1f} tok/s)")

@@ -1,5 +1,7 @@
 """Nested self-speculative decoding: tokens/s sweep over (draft rank, k)
-vs the PR-2 chunked-prefill engine (the spec-decode acceptance benchmark).
+vs the PR-2 chunked-prefill engine, plus a temperature x k sweep of
+stochastic speculative sampling vs the PR-3 verify-only fallback (the
+spec-decode acceptance benchmarks).
 
 Model: a serving-sized dense transformer whose factorizable weights are
 rescaled to a *trained-model-like decaying spectrum* before decomposition.
@@ -18,7 +20,13 @@ on the cheaper prefix row.
 
 Derived columns: per-(draft, k) tokens/s, acceptance rate, mean accepted
 length, and the speedup vs the non-speculative chunked engine; the best
-point is re-emitted (acceptance target: >= 1.3x).
+point is re-emitted (acceptance target: >= 1.3x greedy). The stochastic
+sweep times the same stream at temperature 0.8 under Leviathan
+accept/resample (fixed k and adaptive-k points) against the verify-only
+fallback (``SpecConfig(stochastic=False)`` — exactly the PR-3 behavior,
+where sampled sequences decode one token per round through verify);
+acceptance target: best stochastic point >= 1.2x tokens/s over the
+fallback.
 """
 import time
 
@@ -33,7 +41,8 @@ from repro.data import make_source
 from repro.launch.train import build_flexrank_state
 from repro.models import common as cm
 from repro.models import transformer as tfm
-from repro.serving import ElasticEngine, Request, SpecConfig
+from repro.serving import (ElasticEngine, Request, SamplingParams,
+                           SpecConfig)
 
 BENCH_CFG = ModelConfig(
     name="spec-bench", family="dense", num_layers=4, d_model=512,
@@ -78,18 +87,20 @@ def impose_low_rank_spectrum(dense, cfg, *, knee_frac=0.1, tail=0.02):
     return dense
 
 
-def _spec_stream(cfg, n, rng):
+def _spec_stream(cfg, n, rng, sampling=None):
     """Mixed decode-bound stream: short prompts, every fourth response runs
     long, the rest medium — the small-batch generation-heavy regime
     speculative decoding targets (one round of draft-cache warmup per
-    sequence amortizes over its decode)."""
+    sequence amortizes over its decode). ``sampling`` switches the whole
+    stream to stochastic requests (the temperature sweep)."""
     reqs = []
     for i in range(n):
         plen = int(rng.integers(4, 14))
         max_new = (int(rng.integers(48, 65)) if i % 4 == 0
                    else int(rng.integers(24, 41)))
         prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
-        reqs.append(Request(prompt=prompt, max_new_tokens=max_new, budget=1.0))
+        reqs.append(Request(prompt=prompt, max_new_tokens=max_new, budget=1.0,
+                            sampling=sampling))
     return reqs
 
 
@@ -171,6 +182,62 @@ def main():
     if speedup < 1.3:
         print(f"# WARNING: best spec speedup {speedup:.2f}x < 1.3x "
               "acceptance target")
+
+    # ------------- stochastic sampling: Leviathan accept vs verify-only
+    # (draft rank fixed at the greedy sweep's best; the dimension that
+    # matters here is temperature x k and the adaptive-k controller)
+    temp = 0.8
+    sreqs = _spec_stream(BENCH_CFG, 8, rng,
+                         sampling=SamplingParams(temperature=temp, seed=1))
+    sgen = sum(r.max_new_tokens for r in sreqs)
+    spoints = [dict(spec_len=k) for k in SPEC_LENS]
+    spoints.append(dict(spec_len=max(SPEC_LENS), adaptive_k=True))
+
+    def scfg(stochastic=True, **kw):
+        return SpecConfig(draft_rank=draft, stochastic=stochastic, **kw)
+
+    fb = mk(scfg(stochastic=False, spec_len=max(SPEC_LENS)))
+    fb.generate(sreqs, mode="continuous")             # warm traces
+    for pt in spoints:
+        eng.spec = scfg(**pt)
+        eng.generate(sreqs, mode="continuous")
+
+    wall_fb = None
+    swalls, sstats = {}, {}
+    for _ in range(REPS):
+        w = _timed(fb, sreqs)
+        wall_fb = w if wall_fb is None or w < wall_fb else wall_fb
+        for i, pt in enumerate(spoints):
+            eng.spec = scfg(**pt)
+            w = _timed(eng, sreqs)
+            if i not in swalls or w < swalls[i]:
+                swalls[i] = w
+            sstats[i] = eng.last_metrics.summary()
+
+    tps_fb = sgen / wall_fb
+    emit(f"spec_stoch_t{temp}_fallback", wall_fb * 1e6, f"{tps_fb:.1f}")
+    sbest = None
+    for i, pt in enumerate(spoints):
+        wall, s = swalls[i], sstats[i]
+        tps = sgen / wall
+        speedup = tps / tps_fb
+        label = ("adaptive" if pt.get("adaptive_k")
+                 else f"k{pt['spec_len']}")
+        emit(f"spec_stoch_t{temp}_{label}", wall * 1e6,
+             f"{tps:.1f} tok/s {speedup:.2f}x "
+             f"acc={s['spec_acceptance_rate']:.2f} "
+             f"mal={s['spec_mean_accepted_len']:.2f}")
+        if sbest is None or speedup > sbest[0]:
+            sbest = (speedup, label, s)
+
+    speedup, label, s = sbest
+    emit("spec_stoch_best", wall_fb * 1e6,
+         f"{speedup:.2f}x at {label} temp={temp} "
+         f"(acceptance {s['spec_acceptance_rate']:.2f}, "
+         f"mean accepted len {s['spec_mean_accepted_len']:.2f})")
+    if speedup < 1.2:
+        print(f"# WARNING: best stochastic spec speedup {speedup:.2f}x "
+              "< 1.2x acceptance target at temperature 0.8")
 
 
 if __name__ == "__main__":

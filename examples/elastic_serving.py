@@ -87,7 +87,8 @@ def main(argv=None):
     mb = baseline.last_metrics.summary()
     print(f"\nfull-prompt-prefill baseline: {mb['tokens_per_s']:8.1f} tok/s, "
           f"ttft mean {mb['ttft_mean_s']*1e3:.1f} ms "
-          f"(same stream, batch-1 prefill at admission)")
+          f"(same stream, whole prompts as single chunks — the retired "
+          f"PR-1 path's deprecation shim)")
 
     import time
     t0 = time.perf_counter()

@@ -97,8 +97,28 @@ def _kernel(block_tables_ref, context_lens_ref, q_ref, k_ref, v_ref, o_ref,
 def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     block_tables: jax.Array, context_lens: jax.Array, *,
                     softcap: float = 0.0, interpret: bool = False) -> jax.Array:
-    """q: (B, Hq, D); pools: (NB, BS, Hkv, D); block_tables: (B, MB);
-    context_lens: (B,). Returns (B, Hq, D)."""
+    """Paged decode attention: one query token per batch slot.
+
+    Contract (see docs/kernels.md for the full operand walkthrough):
+
+    * ``q``: (B, Hq, D) — the decode batch's current tokens.
+    * ``k_pool`` / ``v_pool``: (NB, BS, Hkv, D) — global block pools; a
+      sequence's K/V lives at the (non-contiguous) blocks its table names.
+      Hq must be a multiple of Hkv (grouped-query heads).
+    * ``block_tables``: (B, MB) int32 — scalar-prefetch operand; entry
+      ``[i, j]`` is the pool slot of sequence ``i``'s ``j``-th block.
+      Unused entries must point at a valid pool slot (the shared null
+      block 0) so every grid step's DMA stays in bounds.
+    * ``context_lens``: (B,) int32 — keys visible to each query; blocks at
+      or past the length are skipped (their values never enter the
+      softmax), so stale data in reused blocks is harmless.
+    * ``softcap`` > 0 applies ``softcap * tanh(logits / softcap)``.
+
+    Grid is (B, MB), MB innermost and sequential per sequence: streaming
+    (flash) softmax over blocks with float32 running (max, denom, acc)
+    scratch. Returns (B, Hq, D) in ``q``'s dtype. Prefer calling through
+    ``ops.paged_attention_forward`` — it owns the ref/Pallas/interpret
+    dispatch and the sliding-window oracle fallback."""
     b, hq, d = q.shape
     _, bs, hkv, _ = k_pool.shape
     mb = block_tables.shape[1]
@@ -146,8 +166,30 @@ def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
                             slot_ids: jax.Array, context_lens: jax.Array, *,
                             softcap: float = 0.0,
                             interpret: bool = False) -> jax.Array:
-    """q: (T, Hq, D) flat chunk/decode tokens; pools: (NB, BS, Hkv, D);
-    block_tables: (B, MB); slot_ids/context_lens: (T,). Returns (T, Hq, D)."""
+    """Flat-token paged attention for mixed prefill/decode iterations and
+    speculative verify runs.
+
+    Contract (see docs/kernels.md):
+
+    * ``q``: (T, Hq, D) — ONE flat token batch: decode tokens, prompt
+      chunks, draft-warmup feeds, and k+1-token verify runs all mix here;
+      consecutive tokens of one run belong to the same sequence.
+    * ``slot_ids``: (T,) int32 — third scalar-prefetch operand mapping
+      each token to its block-table ROW. Pad tokens must point at an
+      appended row of null blocks, never at a live sequence.
+    * ``block_tables``: (B + null_rows, MB) int32 — as in
+      ``paged_attention``, plus the pad rows.
+    * ``context_lens``: (T,) int32 — per TOKEN, ``position + 1``: the
+      token's own causal horizon. Intra-chunk causality works because the
+      caller scatters the whole chunk's K/V into the pool *before* this
+      kernel runs; token ``i`` of a chunk then sees exactly its prefix.
+    * ``softcap`` as in ``paged_attention``.
+
+    Grid is (T, MB); the block-table row is resolved through
+    ``slot_ids`` inside the BlockSpec index maps, so the body is the same
+    streaming-softmax step as the decode kernel (``_flash_body``).
+    Returns (T, Hq, D). Prefer ``ops.paged_prefill_attention_forward``
+    for dispatch."""
     t, hq, d = q.shape
     _, bs, hkv, _ = k_pool.shape
     mb = block_tables.shape[1]

@@ -3,12 +3,17 @@ requests at mixed budgets through the GAR-deployed submodels with the
 continuous-batching engine (paged KV cache, iteration-level join, with
 ``--prefill-chunk`` chunked prefill fused into decode iterations, and with
 ``--spec-draft-rank`` nested self-speculative decoding: a low-rank prefix
-row drafts ``--spec-len`` tokens per round, the full row verifies them in
-one multi-token forward).
+row drafts up to ``--spec-len`` tokens per round, the full row verifies
+them in one multi-token forward). With ``--temperature`` the speculative
+rounds run stochastic (Leviathan) acceptance — distribution-exact vs
+target-only sampling — unless ``--spec-no-stochastic`` restores the
+verify-only fallback; ``--spec-adaptive-k`` lets each sequence's draft
+length track its trailing acceptance rate.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small --smoke \
       --requests 6 --budgets 0.4,0.7,1.0 --engine continuous \
-      --prefill-chunk 64 --spec-draft-rank 0.5 --spec-len 4
+      --prefill-chunk 64 --spec-draft-rank 0.7 --spec-len 4 \
+      --temperature 0.8 --spec-adaptive-k
 """
 from __future__ import annotations
 
@@ -45,9 +50,8 @@ def main(argv=None):
                     help="prompt tokens per chunk for mixed prefill/decode "
                          "iterations (0 = full-prompt prefill at admission)")
     ap.add_argument("--token-budget", type=int, default=0,
-                    help="total tokens per mixed iteration "
-                         "(0 = max_batch + prefill_chunk; requires "
-                         "--prefill-chunk)")
+                    help="total tokens per mixed or speculative iteration "
+                         "(0 = max_batch + prefill_chunk)")
     ap.add_argument("--prefill-order", default="fifo",
                     choices=["fifo", "srpf"],
                     help="who gets prefill budget first when it spills "
@@ -58,16 +62,22 @@ def main(argv=None):
                          "(0 = speculation off); drafts run on the nested "
                          "low-rank prefix submodel, the full row verifies")
     ap.add_argument("--spec-len", type=int, default=4,
-                    help="draft tokens proposed per speculative round")
+                    help="max draft tokens proposed per speculative round")
+    ap.add_argument("--spec-adaptive-k", action="store_true",
+                    help="adapt each sequence's draft length to its "
+                         "trailing acceptance-rate EWMA within "
+                         "[0, --spec-len]")
+    ap.add_argument("--spec-no-stochastic", action="store_true",
+                    help="verify-only fallback for sampled requests "
+                         "(k = 0 rounds, token-identical to the "
+                         "non-speculative engine) instead of stochastic "
+                         "accept/resample")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for all requests "
                          "(0 = greedy argmax)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="top-k truncation when sampling (0 = off)")
     args = ap.parse_args(argv)
-    if args.token_budget and not (args.prefill_chunk or args.spec_draft_rank):
-        ap.error("--token-budget only applies to mixed or speculative "
-                 "iterations; set --prefill-chunk or --spec-draft-rank too")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     rng = np.random.default_rng(args.seed)
@@ -76,7 +86,9 @@ def main(argv=None):
     dense = cm.instantiate(tfm.model_spec(cfg), jax.random.PRNGKey(args.seed))
     params_fact, table, infos = build_flexrank_state(cfg, dense, source)
     spec = (SpecConfig(draft_rank=args.spec_draft_rank,
-                       spec_len=args.spec_len)
+                       spec_len=args.spec_len,
+                       stochastic=not args.spec_no_stochastic,
+                       adaptive_k=args.spec_adaptive_k)
             if args.spec_draft_rank else None)
     engine = ElasticEngine(cfg, params_fact, table, infos,
                            max_batch=args.max_batch, max_len=args.max_len,
@@ -114,8 +126,14 @@ def main(argv=None):
                   f"budget={engine.token_budget}, "
                   f"{s['mixed_iterations']:.0f} mixed iterations")
         if args.spec_draft_rank and s["spec_rounds"]:
-            print(f"# spec decode: draft_rank={args.spec_draft_rank}, "
-                  f"k={args.spec_len}, {s['spec_rounds']:.0f} rounds, "
+            mode = ("verify-only" if args.temperature > 0
+                    and args.spec_no_stochastic
+                    else "stochastic" if args.temperature > 0 else "greedy")
+            k_mode = ("adaptive<=" if args.spec_adaptive_k else "") \
+                + str(args.spec_len)
+            print(f"# spec decode ({mode}): "
+                  f"draft_rank={args.spec_draft_rank}, k={k_mode}, "
+                  f"{s['spec_rounds']:.0f} rounds, "
                   f"acceptance {s['spec_acceptance_rate']:.2f}, "
                   f"mean accepted len {s['spec_mean_accepted_len']:.2f}")
     return results

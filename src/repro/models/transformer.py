@@ -718,6 +718,12 @@ def paged_decode_step(
     no shared scalar position — every sequence sits at its own length, which
     is what lets new requests join mid-decode. Returns (logits (B, 1, V),
     new caches with K/V scattered into each sequence's blocks).
+
+    Model-level API: since the PR-1 full-prompt path retired, the serving
+    engine runs every iteration through ``paged_mixed_step``'s flat-token
+    layout instead; this one-token-per-slot entry (and the (B, MB)-grid
+    decode kernel beneath it) is kept as the pure-decode fast path —
+    it needs no per-token ``slot_ids`` indirection.
     """
     assert paged_compatible(cfg), cfg.name
     positions = caches["positions"]
@@ -806,6 +812,15 @@ def paged_verify_step(
     would have seen — greedy acceptance over the returned logits is
     therefore token-identical to non-speculative decoding, and rejected
     suffixes are rolled back host-side with ``PagedKVCache.truncate_slot``.
+
+    Return contract: the FULL ``(1, T, V)`` logits rows, never an argmax
+    reduction. Greedy acceptance only needs the per-position argmax, but
+    stochastic speculative sampling compares whole distributions — the
+    accept test ``min(1, p_tgt(x) / p_draft(x))`` and the residual resample
+    ``max(p_tgt - p_draft, 0)`` both need the target row's complete
+    per-position logits, warped host-side by the request's sampler
+    (``serving.sampling.SamplerState.probs``). Reducing on device would
+    silently forfeit distributional exactness for sampled requests.
 
     Sharing the ``paged_mixed_step`` body (same ``_run_paged_segments``
     loop, same ``paged_prefill_attention`` kernel) is deliberate: the PR-2

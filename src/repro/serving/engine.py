@@ -23,31 +23,37 @@ request names a budget, the scheduler routes it to a GAR-deployed row
     which case its partial chunks are discarded with its blocks.
 
   * **nested self-speculative decoding** (``spec`` set): the low-rank
-    prefix row of the same nested decomposition proposes ``spec_len``
+    prefix row of the same nested decomposition proposes up to ``spec_len``
     tokens per round and the full row verifies them in ONE multi-token
     ``paged_verify_step`` forward; greedy acceptance is token-identical to
-    target-only decoding. Each sequence holds a draft + target cache slot
-    pair over one shared allocator; rejected drafts roll back via
-    ``truncate_slot``. See ``repro.spec`` for the round anatomy.
+    target-only decoding, and stochastic (temperature/top-k) acceptance is
+    Leviathan accept/resample — *distribution*-identical to target-only
+    sampling. Per-sequence draft lengths adapt to trailing acceptance when
+    ``SpecConfig.adaptive_k`` is set. Each sequence holds a draft + target
+    cache slot pair over one shared allocator; rejected drafts roll back
+    via ``truncate_slot``. See ``repro.spec`` for the round anatomy.
 
-Knobs: ``prefill_chunk`` (prompt tokens per chunk; ``None`` keeps the PR-1
-behavior of one batch-1 full-prompt forward at admission — the benchmark
-baseline), ``token_budget`` (total tokens per mixed iteration, default
-``max_batch + prefill_chunk``; decode tokens are reserved first, so a long
-prefill can never starve running decodes), ``prefill_order`` (``"fifo"``
-admission order vs ``"srpf"`` shortest-remaining-prefill-first when budget
-spills over), ``spec`` (a ``repro.spec.SpecConfig`` turning on speculative
-decoding; per-request override via ``Request.spec_len``). Sampling is
-per-request (``Request.sampling``): greedy argmax by default, temperature /
-top-k with a resettable per-request PRNG stream otherwise (recompute after
-preemption replays identical draws). See ``scheduler`` for the waiting ->
-prefilling -> decoding state machine.
+Knobs: ``prefill_chunk`` (prompt tokens per chunk; ``None`` is a
+*deprecation shim* for the retired PR-1 full-prompt path — continuous
+serving then runs the same mixed iterations with a full-prompt-sized
+chunk, so the old benchmark-baseline flag still resolves), ``token_budget``
+(total tokens per mixed iteration, default ``max_batch + prefill_chunk``;
+decode tokens are reserved first, so a long prefill can never starve
+running decodes), ``prefill_order`` (``"fifo"`` admission order vs
+``"srpf"`` shortest-remaining-prefill-first when budget spills over),
+``spec`` (a ``repro.spec.SpecConfig`` turning on speculative decoding;
+per-request override via ``Request.spec_len``). Sampling is per-request
+(``Request.sampling``): greedy argmax by default, temperature / top-k with
+a resettable per-request PRNG stream otherwise (recompute after preemption
+replays identical draws). See ``scheduler`` for the waiting -> prefilling
+-> decoding state machine.
 
 Families outside the paged path (mamba/rwkv/zamba/MLA/enc-dec) fall back to
 the drain-batch engine, itself upgraded to single-pass prefill.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List, Optional, TYPE_CHECKING
 
 import jax
@@ -60,7 +66,7 @@ from repro.models import transformer as tfm
 from repro.serving.batcher import ContinuousBatcher
 from repro.serving.kv_cache import CacheOOM, PagedKVCache
 from repro.serving.metrics import ServingMetrics
-from repro.serving.sampling import SamplerState, sample_token
+from repro.serving.sampling import SamplerState
 from repro.serving.scheduler import (BudgetRouter, Request, Result, Scheduler,
                                      Sequence)
 
@@ -91,20 +97,30 @@ class ElasticEngine:
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.prefill_chunk = prefill_chunk
+        # deprecation shim for the retired PR-1 full-prompt prefill path:
+        # ``prefill_chunk=None`` now serves through the same mixed loop with
+        # a chunk the size of the longest possible prompt — one iteration
+        # per whole prompt, semantically the old baseline, one code path
+        self._chunk = prefill_chunk if prefill_chunk is not None else max_len
         if prefill_order not in ("fifo", "srpf"):
             raise ValueError(f"unknown prefill_order {prefill_order!r}")
         self.prefill_order = prefill_order
-        if token_budget is not None and prefill_chunk is None and spec is None:
-            raise ValueError(
-                "token_budget only applies to mixed chunked-prefill or "
-                "speculative iterations; set prefill_chunk or spec too")
         if token_budget is None and prefill_chunk is not None:
             token_budget = max_batch + prefill_chunk
         if token_budget is not None and token_budget < max_batch + 1:
             raise ValueError(
                 f"token_budget {token_budget} leaves no room for prefill "
                 f"beside {max_batch} decode slots (need >= max_batch + 1)")
+        # self.token_budget keeps the PR-2/PR-3 semantics: the user's value,
+        # or max_batch + prefill_chunk when only the chunk knob is set, or
+        # None when neither is — the spec decoder substitutes its larger
+        # speculative default (max_batch * (spec_len + 1) + chunk) ONLY in
+        # that last case; with a chunked budget, speculation deliberately
+        # yields to seated prefills round by round
         self.token_budget = token_budget
+        # effective per-iteration budget for the mixed loop
+        self._mixed_budget = (token_budget if token_budget is not None
+                              else max_batch + self._chunk)
         self.spec = spec
         self._deployed: Dict[int, object] = {}
         # deployed-param cost per budget row, computed ONCE (the seed redid
@@ -120,10 +136,6 @@ class ElasticEngine:
             lambda p, st, tok: tfm.prefill(p, self.cfg, st, tok))
         # caches donated: K/V pools update in place instead of copying the
         # whole pool every step
-        self._paged_jit = jax.jit(
-            lambda p, caches, tok: tfm.paged_decode_step(
-                p, self.cfg, caches, tok, use_pallas=self.use_pallas),
-            donate_argnums=(1,))
         self._mixed_jit = jax.jit(
             lambda p, caches, tok: tfm.paged_mixed_step(
                 p, self.cfg, caches, tok, use_pallas=self.use_pallas),
@@ -193,8 +205,13 @@ class ElasticEngine:
             metrics.on_submit(seq.req_id)
             submitted.append(seq)
         results: Dict[int, Result] = {}
-        serve_row = (self._serve_row if self.prefill_chunk is None
-                     else self._serve_row_mixed)
+        if self.prefill_chunk is None and self.spec is None:
+            warnings.warn(
+                "the full-prompt prefill path is retired: continuous "
+                "serving without prefill_chunk now runs mixed iterations "
+                "with a full-prompt-sized chunk (set prefill_chunk "
+                "explicitly to silence this)", DeprecationWarning,
+                stacklevel=3)
         while sched.has_waiting():
             row = sched.next_row()
             draft_row = self.spec_draft_row(row)
@@ -204,7 +221,7 @@ class ElasticEngine:
                             spec=self.spec, sched=sched, metrics=metrics,
                             results=results).serve()
             else:
-                serve_row(row, sched, metrics, results)
+                self._serve_row_mixed(row, sched, metrics, results)
         return [results[s.req_id] for s in submitted]
 
     def _finish(self, seq: Sequence, metrics, results) -> None:
@@ -215,91 +232,6 @@ class ElasticEngine:
             tokens=tokens, budget_row=seq.row,
             deployed_params=self.router.deployed_params(seq.row),
             ttft_s=metrics.traces[seq.req_id].ttft)
-
-    def _serve_row(self, row: int, sched: Scheduler, metrics: ServingMetrics,
-                   results: Dict[int, Result]) -> None:
-        """Run one budget row's continuous-batching loop until its queue and
-        batch drain. Requests submitted for this row join mid-decode.
-        (PR-1 baseline path: each admission prefills the whole prompt in one
-        batch-1 forward before decode resumes.)"""
-        params = self._realize(row)
-        cache = PagedKVCache(self.cfg, max_batch=self.max_batch,
-                             max_len=self.max_len, block_size=self.block_size,
-                             num_blocks=self.num_blocks)
-        batcher = ContinuousBatcher(self.max_batch)
-
-        while True:
-            self._admit(params, row, sched, cache, batcher, metrics, results)
-            if batcher.num_active == 0:
-                if sched.has_waiting(row):
-                    raise CacheOOM(
-                        "cache cannot fit a single waiting request "
-                        f"(free blocks: {cache.allocator.free_count})")
-                break
-            self._reserve_or_preempt(sched, cache, batcher, metrics)
-            if batcher.num_active == 0:
-                continue                       # everyone was preempted
-
-            # truncate the table view to the live maximum so attention cost
-            # tracks actual context lengths, not max_len
-            logits, new_caches = self._paged_jit(
-                params, cache.model_caches(cache.active_max_blocks()),
-                jnp.asarray(batcher.feed_tokens()))
-            cache.update_pools(new_caches)
-            sampled = np.array(jnp.argmax(logits[:, 0], axis=-1), np.int32)
-            for slot in batcher.active_slots():
-                seq = batcher.slots[slot]
-                if not seq.sampler.greedy:   # greedy keeps the device argmax
-                    sampled[slot] = seq.sampler.sample(
-                        np.asarray(logits[slot, 0]))
-            stepped = batcher.active_sequences()
-            for seq in stepped:
-                metrics.on_token(seq.req_id)
-            metrics.on_decode_step(len(stepped), cache.occupancy())
-            for slot in batcher.advance(sampled):
-                seq = batcher.leave(slot)
-                cache.free_slot(slot)
-                self._finish(seq, metrics, results)
-
-    def _admit(self, params, row, sched, cache, batcher, metrics, results):
-        """Iteration-level join: prefill waiting requests into free slots."""
-        for slot in batcher.free_slots():
-            if not sched.has_waiting(row):
-                break
-            nxt = sched.queues[row][0]
-            if not cache.can_allocate(nxt.prompt_len):
-                break                          # wait for blocks to free up
-            seq = sched.pop(row)
-            metrics.on_admit(seq.req_id)
-            if seq.request.max_new_tokens <= 0:   # prompt-only, matches drain
-                self._finish(seq, metrics, results)
-                continue
-            cache.allocate_slot(slot, seq.prompt_len)
-            first = self._prefill_slot(params, cache, slot, seq)
-            metrics.on_prefill_end(seq.req_id)
-            seq.generated.append(first)
-            seq.prefill_pos = seq.prompt_len
-            metrics.on_first_token(seq.req_id, seq.prompt_len)
-            if seq.done:                       # max_new_tokens == 1
-                cache.free_slot(slot)
-                self._finish(seq, metrics, results)
-            else:
-                batcher.join(slot, seq, first)
-
-    def _prefill_slot(self, params, cache: PagedKVCache, slot: int,
-                      seq: Sequence) -> int:
-        """Single-pass prefill of one prompt, scattered into the slot's
-        blocks. Prompt is padded to the block boundary (padded positions are
-        never attended — context_len masks them) so prefill shapes bucket by
-        block count, keeping jit retraces O(max_blocks_per_seq)."""
-        plen = seq.prompt_len
-        s_pad = len(cache.slots[slot].blocks) * cache.block_size
-        state = tfm.init_decode_state(self.cfg, 1, s_pad, dtype=jnp.float32)
-        padded = np.zeros((1, s_pad), np.int32)
-        padded[0, :plen] = np.asarray(seq.request.prompt, np.int32)
-        logits, state = self._prefill_jit(params, state, jnp.asarray(padded))
-        cache.write_prefill(slot, state["segments"])
-        return sample_token(seq, np.asarray(logits[0, plen - 1]))
 
     def _block_holders(self, cache, batcher):
         """Seated sequences that actually own blocks — the only useful
@@ -343,9 +275,9 @@ class ElasticEngine:
         """Flat-batch width bucket: smallest power of two >= used (floor 8),
         capped at the token budget — O(log budget) jit traces, and pure
         decode iterations don't pay for unused prefill budget. ``budget``
-        overrides ``self.token_budget`` (the spec decoder carries its own)."""
+        overrides ``self._mixed_budget`` (the spec decoder carries its own)."""
         if budget is None:
-            budget = self.token_budget
+            budget = self._mixed_budget
         t = 8
         while t < used:
             t *= 2
@@ -387,11 +319,11 @@ class ElasticEngine:
 
             # FIFO chunk plan under the leftover budget, clipped to what the
             # free list can actually cover right now
-            budget_left = self.token_budget - len(decode_slots)
+            budget_left = self._mixed_budget - len(decode_slots)
             prefilling = [batcher.slots[s] for s in batcher.prefill_slots()]
             chunks = []                      # (slot, seq, start, n)
             for seq, want in Scheduler.plan_prefill_chunks(
-                    prefilling, budget_left, self.prefill_chunk,
+                    prefilling, budget_left, self._chunk,
                     order=self.prefill_order):
                 slot = batcher.slot_of(seq)
                 got = cache.extend_slot(slot, want, clip=True)

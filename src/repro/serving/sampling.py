@@ -9,9 +9,31 @@ the scheduler's recompute-identity guarantee even for stochastic requests.
 
 Greedy (``temperature == 0``, the default) stays the fast path: engines
 argmax the whole batch on device and only fall back to the host-side sampler
-for the slots that asked for it. Speculative decoding's token-identity
-guarantee is stated for greedy only; sampled sequences run with a draft
-length of 0 (plain verify-as-decode), which is exact by construction.
+for the slots that asked for it.
+
+Two PRNG disciplines coexist, split off the same ``(seed, req_id)`` key:
+
+  * the **sequential stream** (``sample``): one draw per committed token, in
+    commit order. Used by the drain and mixed engines, where every sampler
+    path consumes exactly one draw per token — ``reset()`` + recompute then
+    replays the identical stream.
+  * **stream-split keyed draws** (``uniform`` / ``sample_at``): each draw is
+    keyed by ``(seed, req_id, purpose, position)`` — a counter-based scheme
+    where the uniforms backing a committed position are a pure function of
+    the key, not of how many draws happened before. Speculative decoding
+    needs this: a round may propose, test, and resample several positions
+    and then throw some of those draws away on rejection or mid-round
+    preemption; sequential consumption would drift the stream, keyed draws
+    cannot. The ``DRAW_*`` purposes keep the proposal, accept-test, and
+    residual-resample uniforms of one position mutually independent.
+
+For speculative decoding the sampler also exposes its *warped distribution*
+(``probs``): the temperature/top-k-transformed categorical the request
+actually samples from. Stochastic speculative acceptance (accept draft ``x``
+with probability ``min(1, p_tgt(x) / p_draft(x))``, resample from the
+normalized residual ``max(p_tgt - p_draft, 0)`` on rejection) must run on
+these warped distributions — that is what makes the committed tokens exactly
+distributed as target-only sampling with the same knobs.
 """
 from __future__ import annotations
 
@@ -19,6 +41,17 @@ import dataclasses
 from typing import Optional
 
 import numpy as np
+
+# Stream-split draw purposes (see module docstring). One committed position
+# consumes at most one draw per purpose, so the tuple (seed, req_id,
+# purpose, position) never collides across a sequence's lifetime — including
+# across preemption-recompute attempts, which simply re-derive the same
+# uniforms at the same positions.
+DRAW_TARGET = 0     # direct target-distribution sample: verify-only commit,
+                    # all-accepted bonus token, prefill-completion token
+DRAW_DRAFT = 1      # draft-row proposal
+DRAW_ACCEPT = 2     # accept test u <= p_tgt(x) / p_draft(x)
+DRAW_RESIDUAL = 3   # resample from the normalized residual on rejection
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,12 +72,24 @@ class SamplingParams:
 GREEDY = SamplingParams()
 
 
+def sample_from(probs: np.ndarray, u: float) -> int:
+    """Inverse-CDF sample from a (V,) probability vector with uniform ``u``.
+
+    The CDF is renormalized by its own total so callers may pass an
+    unnormalized (but non-negative) weight vector."""
+    cdf = np.cumsum(probs)
+    return int(min(np.searchsorted(cdf, u * cdf[-1], side="right"),
+                   len(cdf) - 1))
+
+
 class SamplerState:
     """One request's sampler: params + a resettable PRNG stream.
 
     The stream is keyed by ``(seed, req_id)`` so two requests with the same
     user seed still draw independently, and ``reset()`` restores the stream
-    to its initial state for preemption-recompute replay.
+    to its initial state for preemption-recompute replay. Keyed draws
+    (``uniform``) are derived from the same key but are stateless — they
+    need no reset and are immune to stream drift by construction.
     """
 
     def __init__(self, params: Optional[SamplingParams], req_id: int):
@@ -62,11 +107,15 @@ class SamplerState:
     def greedy(self) -> bool:
         return self.params.temperature <= 0.0
 
-    def sample(self, logits: np.ndarray) -> int:
-        """Draw one token from a (V,) float logits row."""
+    def probs(self, logits: np.ndarray) -> np.ndarray:
+        """The warped categorical this sampler draws from, as a (V,) float64
+        probability vector: temperature scaling then top-k truncation.
+        Greedy degenerates to one-hot argmax (the zero-temperature limit)."""
         logits = np.asarray(logits, np.float64)
         if self.greedy:
-            return int(np.argmax(logits))
+            p = np.zeros(logits.shape[-1])
+            p[int(np.argmax(logits))] = 1.0
+            return p
         z = logits / self.params.temperature
         if self.params.top_k:
             k = min(self.params.top_k, z.shape[-1])
@@ -74,15 +123,44 @@ class SamplerState:
             z = np.where(z >= cutoff, z, -np.inf)
         z = z - z.max()
         p = np.exp(z)
-        p /= p.sum()
-        return int(self._rng.choice(z.shape[-1], p=p))
+        return p / p.sum()
+
+    def uniform(self, position: int, purpose: int) -> float:
+        """Stream-split keyed draw: one uniform in [0, 1) as a pure function
+        of ``(seed, req_id, purpose, position)``. ``position`` is the
+        0-based index of the token in the full sequence (prompt included);
+        ``purpose`` one of the ``DRAW_*`` constants."""
+        return float(np.random.default_rng(
+            (self._key[0], self._key[1], purpose, position)).random())
+
+    def sample(self, logits: np.ndarray) -> int:
+        """Draw one token from a (V,) float logits row off the sequential
+        stream (exactly one draw consumed — the drain/mixed-engine
+        discipline)."""
+        logits = np.asarray(logits, np.float64)
+        if self.greedy:
+            return int(np.argmax(logits))
+        return sample_from(self.probs(logits), float(self._rng.random()))
+
+    def sample_at(self, position: int, logits: np.ndarray) -> int:
+        """Draw the token at ``position`` from the warped target
+        distribution with the position-keyed ``DRAW_TARGET`` uniform (the
+        speculative decoder's target-sample path — drift-free under
+        rollback and preemption replay)."""
+        logits = np.asarray(logits, np.float64)
+        if self.greedy:
+            return int(np.argmax(logits))
+        return sample_from(self.probs(logits),
+                           self.uniform(position, DRAW_TARGET))
 
 
 def sample_token(seq, logits_row) -> int:
-    """Sample the next token for ``seq`` from its (V,) logits row. Engines
-    call this at every point a token is materialized (decode step, prefill
-    completion, verify position) so one code path owns the greedy/stochastic
-    split."""
+    """Sample the next token for ``seq`` from its (V,) logits row off the
+    sequential stream. Engines call this at every point a token is
+    materialized (decode step, prefill completion, verify position) so one
+    code path owns the greedy/stochastic split. The speculative decoder
+    instead uses ``SamplerState.sample_at`` and the ``DRAW_*`` keyed draws
+    for sequences participating in stochastic speculation."""
     sampler = getattr(seq, "sampler", None)
     if sampler is None or sampler.greedy:
         return int(np.argmax(np.asarray(logits_row)))

@@ -32,7 +32,11 @@ collapse prefilling into a single admission-time forward.
 
 ``Scheduler.plan_prefill_chunks`` is the per-iteration budget accounting:
 FIFO over seated prefilling sequences, each clipped to the chunk knob, the
-remaining prompt, and the remaining budget.
+remaining prompt, and the remaining budget. ``Scheduler.split_spec_extras``
+is its speculative sibling: a round-robin fair split of one speculative
+round's leftover tokens across the decoding sequences' (possibly
+adaptive-k, hence unequal) draft-length wants, so a round's worst-case
+``k + 1`` verify tokens per sequence always respect the token budget.
 """
 from __future__ import annotations
 
@@ -76,6 +80,11 @@ class Sequence:
     state: str = "waiting"       # waiting | prefilling | decoding
     prefill_pos: int = 0         # prompt tokens already pushed through
     sampler: Optional[SamplerState] = None   # set at submit
+    # adaptive-k speculative-decoding controller state (spec/config.py
+    # reads and writes these; None/0 until the sequence first drafts):
+    spec_k: Optional[int] = None            # current per-sequence draft length
+    spec_accept_ewma: Optional[float] = None  # trailing acceptance-rate EWMA
+    spec_idle_rounds: int = 0               # rounds parked at k = 0 (probe timer)
 
     @property
     def prompt_len(self) -> int:
@@ -97,6 +106,12 @@ class Sequence:
         self.generated.clear()
         self.prefill_pos = 0
         self.state = "waiting"
+        # adaptive-k controller restarts with the sequence: the recomputed
+        # attempt re-derives its draft-length trajectory from scratch, so a
+        # run with preemption stays a deterministic function of the workload
+        self.spec_k = None
+        self.spec_accept_ewma = None
+        self.spec_idle_rounds = 0
         if self.sampler is not None:
             # recompute must replay the same stochastic draws token-for-token
             self.sampler.reset()
@@ -205,3 +220,33 @@ class Scheduler:
             plan.append((seq, n))
             budget -= n
         return plan
+
+    @staticmethod
+    def split_spec_extras(wants: List[int], extras: int) -> List[int]:
+        """Fair split of one speculative round's extras budget.
+
+        ``wants[i]`` is sequence ``i``'s requested draft length this round
+        (the adaptive-k controller's output); ``extras`` is the round's
+        token budget left after every decoding sequence reserved its one
+        mandatory verify token (and seated prefills their chunk). Grants are
+        dealt round-robin, one draft token per sequence per lap, so a tight
+        budget shaves every deep drafter evenly instead of letting the
+        earliest seats hoard the budget and starve the rest (with adaptive
+        k, per-sequence wants diverge — first-come allocation would
+        systematically bias which sequences get to speculate). When
+        ``extras >= sum(wants)`` the grants are exactly the wants.
+        """
+        grants = [0] * len(wants)
+        left = max(0, extras)
+        while left > 0:
+            progressed = False
+            for i, w in enumerate(wants):
+                if left <= 0:
+                    break
+                if grants[i] < w:
+                    grants[i] += 1
+                    left -= 1
+                    progressed = True
+            if not progressed:
+                break
+        return grants

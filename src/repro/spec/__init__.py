@@ -4,11 +4,14 @@ verify with the full-rank row, over the paged KV cache.
 FlexRank's importance-ordered nesting makes every lower budget row a prefix
 view of every higher one — a ready-made draft/verify pair that needs no
 separate draft model and no extra weight memory. ``SpecConfig`` names the
-draft budget and draft length; ``SpecDecoder`` drives the draft/verify
-rounds for one budget row inside the serving engine's continuous-batching
-loop (greedy acceptance, token-identical to target-only decoding).
+draft budget and draft-length policy (fixed or adaptive-k); ``SpecDecoder``
+drives the draft/verify rounds for one budget row inside the serving
+engine's continuous-batching loop. Greedy acceptance is token-identical to
+target-only decoding; stochastic acceptance (``stochastic_accept``,
+Leviathan accept/resample) is distribution-identical to target-only
+sampling.
 """
 from repro.spec.config import SpecConfig
-from repro.spec.decoder import SpecDecoder
+from repro.spec.decoder import SpecDecoder, stochastic_accept
 
-__all__ = ["SpecConfig", "SpecDecoder"]
+__all__ = ["SpecConfig", "SpecDecoder", "stochastic_accept"]

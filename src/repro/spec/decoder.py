@@ -1,30 +1,63 @@
 """SpecDecoder: draft/verify rounds for one budget row of the serving engine.
 
-Round anatomy (greedy, token-identical to target-only decoding):
+Round anatomy (greedy acceptance is token-identical to target-only
+decoding; stochastic acceptance is *distribution*-identical — see below):
 
   1. **plan** — for every decoding sequence, reserve cache room for the
      round. The one mandatory verify token keeps the mixed engine's
      semantics (evict youngest block holders under pressure); everything
      speculative — extra verify positions and draft-slot growth — is
      opportunistic and *shrinks* instead of evicting (``k`` degrades toward
-     0, never the other way around).
+     0, never the other way around). Per-sequence draft lengths come from
+     the adaptive-k controller (``SpecConfig.request_spec_len``) and the
+     round's extras budget is dealt fairly across sequences
+     (``Scheduler.split_spec_extras``), so a round's worst-case ``k + 1``
+     verify tokens per sequence respect ``token_budget``.
   2. **draft** — the low-rank prefix row proposes up to ``k`` tokens
      autoregressively through the same flat-token paged forward the mixed
-     engine uses, writing the *draft* cache slot. The draft cache is warmed
-     lazily: the first draft step of each round streams whatever committed
-     tokens the draft slot is missing (``gap``), so a fresh sequence
-     (or a preemption-recomputed one — in-flight draft state is simply
-     dropped with the slots) decodes immediately at ``k = 0`` while its
-     draft cache catches up chunk by chunk.
+     engine uses, writing the *draft* cache slot. Greedy sequences propose
+     the draft row's argmax; stochastic sequences *sample* each proposal
+     from the draft row's warped (temperature/top-k) distribution with a
+     position-keyed ``DRAW_DRAFT`` uniform, and the proposal distribution
+     ``q`` is kept for the accept test. The draft cache is warmed lazily:
+     the first draft step of each round streams whatever committed tokens
+     the draft slot is missing (``gap``), so a fresh sequence (or a
+     preemption-recomputed one — in-flight draft state is simply dropped
+     with the slots) decodes immediately at ``k = 0`` while its draft
+     cache catches up chunk by chunk.
   3. **verify** — ONE full-row ``paged_verify_step`` scores every
-     sequence's ``k+1`` positions (last committed token + drafts); target
-     prefill chunks of not-yet-decoding sequences ride the same forward,
-     so speculation composes with chunked prefill.
-  4. **accept** — longest accepted prefix per sequence: drafts matching the
-     full row's greedy choice commit, the first mismatch is replaced by the
-     full row's own token (so every round commits >= 1 token), and both
-     cache slots roll back via ``truncate_slot`` — rejected draft tokens
-     release their blocks and rewind the write positions.
+     sequence's ``k+1`` positions (last committed token + drafts) and
+     returns full logits rows (never argmax — the stochastic accept test
+     needs the whole per-position distribution); target prefill chunks of
+     not-yet-decoding sequences ride the same forward, so speculation
+     composes with chunked prefill.
+  4. **accept** — greedy: longest accepted prefix (drafts matching the full
+     row's greedy choice commit, the first mismatch is replaced by the full
+     row's own token). Stochastic: Leviathan accept/reject per position —
+     draft ``x`` with proposal distribution ``q`` survives against the
+     target's warped distribution ``p`` iff ``u <= p(x) / q(x)`` (keyed
+     ``DRAW_ACCEPT`` uniform); the first rejection commits a resample from
+     the normalized residual ``max(p - q, 0)`` (``DRAW_RESIDUAL``), and an
+     all-accepted round commits a bonus token straight from the target's
+     last row (``DRAW_TARGET``) — so every round commits >= 1 token and
+     the committed tokens are exactly distributed as target-only sampling
+     (``stochastic_accept`` below carries the proof sketch). Both cache
+     slots then roll back via ``truncate_slot`` — rejected draft tokens
+     release their blocks and rewind the write positions. The accepted
+     count feeds the sequence's adaptive-k EWMA.
+
+Replay discipline: every stochastic draw the decoder makes is keyed by
+(seed, req_id, purpose, position) — never consumed off the sequential
+stream — so dropping in-flight drafts (rollback, mid-round preemption)
+cannot drift a sequence's randomness: the recomputed attempt re-derives
+the same uniforms at the same positions, and a whole serve() run is a
+deterministic function of the workload. Note the *realized* tokens of a
+recomputed stochastic sequence may still differ from a preemption-free
+run when the recomputed rounds draft different positions (a ``k = 0``
+warmup commit draws ``DRAW_TARGET`` where a drafted round would have
+drawn ``DRAW_DRAFT``/``DRAW_ACCEPT``); both paths are exact samplers of
+the same target distribution, which is the invariant stochastic
+speculation maintains (greedy keeps bitwise token identity).
 
 Dual-slot layout: the decoder's ``PagedKVCache`` carries ``2 * max_batch``
 slots over ONE shared ``BlockAllocator`` — seat ``s`` writes target K/V at
@@ -35,7 +68,7 @@ pair.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -43,10 +76,54 @@ import numpy as np
 from repro.serving.batcher import ContinuousBatcher
 from repro.serving.kv_cache import CacheOOM, PagedKVCache
 from repro.serving.metrics import ServingMetrics
-from repro.serving.sampling import sample_token
+from repro.serving.sampling import (DRAW_ACCEPT, DRAW_DRAFT, DRAW_RESIDUAL,
+                                    SamplerState, sample_from, sample_token)
 from repro.serving.scheduler import Scheduler, Sequence
 
 from repro.spec.config import SpecConfig
+
+
+def stochastic_accept(sampler: SamplerState, committed: int,
+                      drafts: List[int], draft_probs: List[np.ndarray],
+                      target_rows: np.ndarray) -> Tuple[List[int], int]:
+    """Leviathan-style stochastic acceptance for one sequence's round.
+
+    ``drafts[j]`` was sampled from the draft row's warped distribution
+    ``draft_probs[j]`` for position ``committed + j``; ``target_rows[j]``
+    is the full row's logits for that position (row ``len(drafts)`` is the
+    all-accepted bonus position). Returns ``(tokens_to_commit,
+    num_accepted_drafts)`` — always at least one token.
+
+    Exactness sketch (Leviathan et al. 2023): at each position the
+    committed token is ``x ~ q`` kept with probability ``min(1, p(x)/q(x))``
+    or, failing that, a draw from the residual ``(p - min(p, q)) /
+    (1 - sum_v min(p(v), q(v)))``; marginalizing over ``x`` gives
+    ``min(p, q) + (1 - sum min(p, q)) * residual = p`` exactly, for any
+    proposal ``q`` — including ``q`` warped by a different model than
+    ``p``, which is the nested-draft case. Positions use independent keyed
+    uniforms, so the round commits an exact sample of the target chain.
+    """
+    out: List[int] = []
+    for j, x in enumerate(drafts):
+        p = sampler.probs(target_rows[j])
+        q = draft_probs[j]
+        pos = committed + j
+        # accept with prob min(1, p/q): u*q <= p avoids the q == 0 division
+        # (q[x] > 0 whenever x was actually proposed from q)
+        if sampler.uniform(pos, DRAW_ACCEPT) * q[x] <= p[x]:
+            out.append(int(x))
+            continue
+        residual = np.maximum(p - q, 0.0)
+        tot = float(residual.sum())
+        # a (numerically) empty residual means p <= q everywhere, where the
+        # accept test almost surely passed; fall back to p itself
+        r = residual / tot if tot > 1e-12 else p
+        out.append(sample_from(r, sampler.uniform(pos, DRAW_RESIDUAL)))
+        return out, j
+    # every draft survived: bonus token straight from the target's k-th row
+    bonus_pos = committed + len(drafts)
+    out.append(sampler.sample_at(bonus_pos, target_rows[len(drafts)]))
+    return out, len(drafts)
 
 
 @dataclasses.dataclass
@@ -58,6 +135,9 @@ class RoundPlan:
     gap_fed: int                 # draft-warmup tokens fed this round
     k: int                       # draft proposals this round (may be 0)
     drafts: List[int] = dataclasses.field(default_factory=list)
+    # warped draft distribution per proposal (stochastic sequences only):
+    # the accept test needs q, not just the proposed token
+    draft_probs: List[np.ndarray] = dataclasses.field(default_factory=list)
 
 
 class SpecDecoder:
@@ -65,8 +145,8 @@ class SpecDecoder:
 
     Borrows the engine's jitted forwards (``_mixed_jit`` for draft steps,
     ``_verify_jit`` for the full-row verify) and its finish/metrics
-    plumbing; owns the dual-slot cache discipline and the
-    longest-accepted-prefix logic.
+    plumbing; owns the dual-slot cache discipline and the acceptance logic
+    (greedy longest-accepted-prefix, stochastic accept/resample).
     """
 
     def __init__(self, engine, *, row: int, draft_row: int, spec: SpecConfig,
@@ -194,6 +274,20 @@ class SpecDecoder:
         if self.batcher.prefill_slots():
             extras_left -= min(self.prefill_chunk,
                                self.engine.max_len)
+        # adaptive-k wants are read once per round per sequence (the probe
+        # counter advances on read), then granted fairly: a tight budget
+        # shaves every drafter evenly instead of letting early seats hoard.
+        # Sequences still warming their draft cache cannot propose this
+        # round, so they want 0 — their share goes to seats that can draft
+        wants = []
+        for seat in decode_seats:
+            seq = self.batcher.slots[seat]
+            want = self.spec.request_spec_len(seq)
+            gap = (seq.prompt_len + len(seq.generated)
+                   - self.cache.slots[self._draft_slot(seat)].num_tokens)
+            wants.append(0 if gap > self.spec.gap_chunk else want)
+        grants = dict(zip(decode_seats,
+                          Scheduler.split_spec_extras(wants, extras_left)))
         for seat in decode_seats:
             seq = self.batcher.slots[seat]
             if seq is None or seq.state != "decoding":
@@ -207,9 +301,7 @@ class SpecDecoder:
             dslot = self._draft_slot(seat)
             gap = committed - self.cache.slots[dslot].num_tokens
             assert gap >= 1, gap
-            want_k = self.spec.request_spec_len(seq)
-            if gap > self.spec.gap_chunk:
-                want_k = 0                       # still warming the draft
+            want_k = grants[seat]                # 0 while warming the draft
             # speculation degrades under pressure, it never evicts: clamp
             # to the round's extras budget and the max_len headroom
             # (extend_slot raises past max_len even with clip), then clip
@@ -297,6 +389,23 @@ class SpecDecoder:
         self.cache.update_pools(new_caches)
         return logits[0]            # device array: callers argmax on device
 
+    def _propose(self, p: RoundPlan, greedy: np.ndarray, logits,
+                 flat_idx: int, step: int) -> None:
+        """Record draft proposal number ``step`` (1-based) for plan ``p``
+        from the draft-row logits at flat position ``flat_idx``. Greedy
+        sequences take the (device-computed) argmax; stochastic sequences
+        sample from the draft row's warped distribution with the
+        position-keyed ``DRAW_DRAFT`` uniform and keep the distribution
+        for the verify pass's accept test."""
+        sampler = p.seq.sampler
+        if sampler.greedy:
+            p.drafts.append(int(greedy[flat_idx]))
+            return
+        q = sampler.probs(np.asarray(logits[flat_idx]))
+        pos = p.committed + step - 1             # index of the proposed token
+        p.drafts.append(sample_from(q, sampler.uniform(pos, DRAW_DRAFT)))
+        p.draft_probs.append(q)
+
     def _draft_phase(self, plans: List[RoundPlan]) -> None:
         """Autoregressive draft proposals (+ lazy draft-cache warmup)."""
         eng = self.engine
@@ -322,7 +431,7 @@ class SpecDecoder:
         logits = self._dispatch(eng._mixed_jit, self.draft_params, entries)
         greedy = np.asarray(jnp.argmax(logits, axis=-1))
         for p, ei in emitters:
-            p.drafts.append(int(greedy[flat_end[ei]]))
+            self._propose(p, greedy, logits, int(flat_end[ei]), 1)
 
         # steps 2..k: one proposal per participating sequence per step
         max_k = max((p.k for p in plans), default=0)
@@ -334,9 +443,19 @@ class SpecDecoder:
                                     entries)
             greedy = np.asarray(jnp.argmax(logits, axis=-1))
             for i, p in enumerate(live):
-                p.drafts.append(int(greedy[i]))
+                self._propose(p, greedy, logits, i, step)
 
     # ----------------------------------------------------------- commit
+
+    def _first_token(self, seq: Sequence, logits_row) -> int:
+        """Prefill-completion token. Sequences participating in stochastic
+        speculation draw it position-keyed (``DRAW_TARGET`` at index
+        ``prompt_len``) so their entire draw history is keyed; verify-only
+        sequences keep the sequential stream (cross-engine identity)."""
+        sampler = seq.sampler
+        if not sampler.greedy and self.spec.request_can_draft(seq):
+            return sampler.sample_at(seq.prompt_len, np.asarray(logits_row))
+        return sample_token(seq, logits_row)
 
     def _verify_and_commit(self, plans: List[RoundPlan], chunks) -> None:
         eng, metrics = self.engine, self.metrics
@@ -350,20 +469,34 @@ class SpecDecoder:
         logits = self._dispatch(eng._verify_jit, self.target_params, entries)
         greedy = np.asarray(jnp.argmax(logits, axis=-1))
 
-        # longest-accepted-prefix per sequence
+        # acceptance per sequence: greedy longest-accepted-prefix, or
+        # Leviathan accept/resample for stochastic drafters
         flat = 0
         drafted = verified = accepted_total = committed_total = 0
         drafting_seqs = sum(1 for p in plans if p.k > 0)
         for p in plans:
             run = p.k + 1
-            targets = [int(greedy[flat + j]) for j in range(run)]
-            if not p.seq.sampler.greedy:
-                targets[0] = sample_token(p.seq, logits[flat])
+            sampler = p.seq.sampler
+            if sampler.greedy:
+                targets = [int(greedy[flat + j]) for j in range(run)]
+                m = 0
+                while m < p.k and p.drafts[m] == targets[m]:
+                    m += 1
+                commit = targets[: m + 1]
+            elif self.spec.request_can_draft(p.seq):
+                rows = np.asarray(logits[flat: flat + run])
+                commit, m = stochastic_accept(sampler, p.committed,
+                                              p.drafts, p.draft_probs, rows)
+            else:
+                # verify-only fallback (``stochastic=False`` or the
+                # ``spec_len=0`` opt-out): one sequential-stream draw,
+                # token-identical to the non-speculative engines
+                assert p.k == 0, (p.seq.req_id, p.k)
+                m = 0
+                commit = [sample_token(p.seq, logits[flat])]
+            commit = commit[: p.seq.remaining]
             flat += run
-            m = 0
-            while m < p.k and p.drafts[m] == targets[m]:
-                m += 1
-            commit = targets[: m + 1][: p.seq.remaining]
+            self.spec.observe_round(p.seq, p.k, m)
             drafted += p.k
             verified += run
             accepted_total += m
@@ -392,7 +525,7 @@ class SpecDecoder:
             metrics.on_prefill_chunk(n)
             if seq.prefill_pos == seq.prompt_len:
                 metrics.on_prefill_end(seq.req_id)
-                first = sample_token(seq, logits[flat + n - 1])
+                first = self._first_token(seq, logits[flat + n - 1])
                 seq.generated.append(first)
                 metrics.on_first_token(seq.req_id)
                 if seq.done:                     # max_new_tokens == 1

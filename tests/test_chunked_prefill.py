@@ -183,8 +183,11 @@ def test_chunked_engine_oom_and_knob_validation(smoke_state):
         _mk_engine(smoke_state, prefill_chunk=0)
     with pytest.raises(ValueError, match="token_budget"):
         _mk_engine(smoke_state, max_batch=4, prefill_chunk=8, token_budget=4)
-    with pytest.raises(ValueError, match="prefill_chunk"):
-        _mk_engine(smoke_state, token_budget=16)   # budget without chunking
+    # token_budget without prefill_chunk is valid since the PR-1 full-prompt
+    # path retired: every continuous path runs mixed iterations, so the
+    # budget always has something to throttle
+    eng = _mk_engine(smoke_state, token_budget=16)
+    assert eng._mixed_budget == 16
 
 
 def test_ttft_breakdown_recorded(smoke_state):

@@ -1,0 +1,54 @@
+"""Docs link check: every ``path/to/file.py:symbol`` anchor in ``docs/``
+must name an existing file and a symbol actually defined in it (class,
+function/method, or module-level constant). Pure stdlib — the CI docs job
+runs this without installing jax.
+
+Anchor grammar: a path containing at least one ``/`` and ending in
+``.py``, a colon, then a dotted identifier chain (``Class.method`` checks
+every component). Plain file mentions without ``:symbol`` are not anchors.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = sorted((REPO / "docs").glob("*.md"))
+
+ANCHOR = re.compile(
+    r"(?P<path>[A-Za-z0-9_.\-]+(?:/[A-Za-z0-9_.\-]+)+\.py)"
+    r":(?P<sym>[A-Za-z_][A-Za-z0-9_]*(?:\.[A-Za-z_][A-Za-z0-9_]*)*)")
+
+
+def _symbol_defined(text: str, name: str) -> bool:
+    return re.search(
+        rf"(?m)^\s*(?:class|def)\s+{re.escape(name)}\b"
+        rf"|^{re.escape(name)}\s*[:=]", text) is not None
+
+
+def _anchors(md: Path):
+    return list(ANCHOR.finditer(md.read_text()))
+
+
+def test_docs_exist_and_carry_anchors():
+    names = {d.name for d in DOCS}
+    assert {"architecture.md", "kernels.md"} <= names, names
+    for doc in DOCS:
+        assert _anchors(doc), f"{doc.name} has no file.py:symbol anchors"
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda d: d.name)
+def test_docs_anchors_resolve(doc):
+    dangling = []
+    for m in _anchors(doc):
+        path, sym = m.group("path"), m.group("sym")
+        target = REPO / path
+        if not target.is_file():
+            dangling.append(f"{path} (missing file)")
+            continue
+        text = target.read_text()
+        for part in sym.split("."):
+            if not _symbol_defined(text, part):
+                dangling.append(f"{path}:{sym} ({part!r} not defined)")
+                break
+    assert not dangling, "dangling doc anchors:\n  " + "\n  ".join(dangling)

@@ -141,16 +141,20 @@ def test_spec_identity_under_mid_round_preemption(smoke_state):
                                       eng.generate_drain([rq])[0].tokens)
 
 
-def test_spec_per_request_opt_out_and_stochastic_k0(smoke_state):
-    """``Request.spec_len=0`` disables drafting for that request, and
-    stochastic requests run verify-only (k = 0) — both stay exact
-    (stochastic vs the same sampler stream on the non-spec engine)."""
+def test_spec_per_request_opt_out_and_verify_only_fallback(smoke_state):
+    """``Request.spec_len=0`` disables drafting for that request, and with
+    ``SpecConfig(stochastic=False)`` (the PR-3 fallback) stochastic
+    requests run verify-only (k = 0) — both stay exact (stochastic vs the
+    same sampler stream on the non-spec engine). Stochastic requests with
+    the default ``stochastic=True`` instead draft through Leviathan
+    accept/resample — covered by tests/test_stochastic_spec.py."""
     cfg = smoke_state[0]
     greedy_opt_out = _requests(cfg, [(9, 5, 1.0)], spec_len=0)
     sampled = _requests(cfg, [(7, 5, 1.0)], seed=9,
                         sampling=SamplingParams(temperature=0.8, seed=3))
     reqs = greedy_opt_out + sampled
-    eng = _mk_engine(smoke_state, spec=SpecConfig(draft_rank=0.9, spec_len=3))
+    eng = _mk_engine(smoke_state, spec=SpecConfig(draft_rank=0.9, spec_len=3,
+                                                  stochastic=False))
     res = eng.generate(reqs, mode="continuous")
     base = _mk_engine(smoke_state)
     ref = base.generate(_requests(cfg, [(9, 5, 1.0)], spec_len=0)
@@ -160,7 +164,8 @@ def test_spec_per_request_opt_out_and_stochastic_k0(smoke_state):
                         mode="continuous")
     for a, b in zip(res, ref):
         np.testing.assert_array_equal(a.tokens, b.tokens)
-    # nobody drafted: one request opted out, the other is stochastic
+    # nobody drafted: one request opted out, the other is stochastic and
+    # the fallback pins stochastic sequences to k = 0
     assert eng.last_metrics.summary()["spec_draft_tokens"] == 0
 
 

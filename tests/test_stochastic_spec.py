@@ -1,0 +1,401 @@
+"""Stochastic speculative sampling: distributional exactness, stream-split
+draw discipline, adaptive-k control, and token-budget accounting.
+
+Layers:
+
+  * sampler unit level — warped distributions (``probs``), inverse-CDF
+    sampling, and the keyed ``uniform`` draws (deterministic, reset-proof,
+    decorrelated across purposes/positions);
+  * accept-loop unit level — seeded chi-squared / TV-distance checks that
+    ``stochastic_accept`` commits tokens *exactly* distributed as the
+    target (small vocab, thousands of trials, fully deterministic seeds);
+  * engine level — a tiny-vocab two-sample frequency comparison of the
+    stochastic-spec engine vs target-only sampling, replay determinism
+    under forced mid-round preemption, the verify-only fallback's
+    token-identity, and per-round ``token_budget`` respect;
+  * controller unit level — the adaptive-k EWMA grow/shrink/probe policy.
+
+``REPRO_SPEC_TEMP`` (CI matrix knob) injects the sweep temperature: 0.0
+degenerates every check to the greedy token-identity guarantee.
+"""
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs.base import FlexRankConfig, ModelConfig, Segment
+from repro.serving import (ElasticEngine, Request, SamplingParams, Scheduler,
+                           Sequence, SpecConfig)
+from repro.serving.sampling import (DRAW_ACCEPT, DRAW_DRAFT, DRAW_TARGET,
+                                    SamplerState, sample_from)
+from repro.spec import stochastic_accept
+
+TEMP = float(os.environ.get("REPRO_SPEC_TEMP", "0.8"))
+
+TINY_CFG = ModelConfig(
+    name="spec-tiny", family="dense", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=32,
+    segments=(Segment("attn", 1), Segment("attn", 1)),
+    rope_base=10000.0,
+    flexrank=FlexRankConfig(enabled=True, budgets=(0.35, 0.6, 1.0)),
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_state():
+    from repro.data import make_source
+    from repro.launch.train import build_flexrank_state
+    from repro.models import common as cm
+    from repro.models import transformer as tfm
+    source = make_source(TINY_CFG.vocab_size, 64, 4, seed=0)
+    dense = cm.instantiate(tfm.model_spec(TINY_CFG), jax.random.PRNGKey(0))
+    params_fact, table, infos = build_flexrank_state(TINY_CFG, dense, source)
+    return TINY_CFG, params_fact, table, infos
+
+
+def _mk_engine(state, **kw):
+    cfg, params_fact, table, infos = state
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("block_size", 8)
+    return ElasticEngine(cfg, params_fact, table, infos, **kw)
+
+
+# ------------------------------------------------------- sampler unit level
+
+def test_probs_matches_sampling_warp():
+    logits = np.asarray([2.0, 1.0, 0.0, -1.0, -30.0])
+    s = SamplerState(SamplingParams(temperature=0.5, top_k=3, seed=0), 0)
+    p = s.probs(logits)
+    assert p.shape == (5,) and abs(p.sum() - 1.0) < 1e-12
+    assert p[3] == 0.0 and p[4] == 0.0          # top-3 truncation
+    z = np.exp(logits[:3] / 0.5)
+    np.testing.assert_allclose(p[:3], z / z.sum(), rtol=1e-12)
+    # greedy limit: one-hot argmax
+    g = SamplerState(None, 0).probs(logits)
+    assert g[0] == 1.0 and g.sum() == 1.0
+
+
+def test_sample_from_inverse_cdf():
+    p = np.asarray([0.25, 0.0, 0.5, 0.25])
+    assert sample_from(p, 0.0) == 0
+    assert sample_from(p, 0.24) == 0
+    assert sample_from(p, 0.26) == 2            # zero-prob token skipped
+    assert sample_from(p, 0.74) == 2
+    assert sample_from(p, 0.76) == 3
+    assert sample_from(p, 0.9999999) == 3       # clamped to the last token
+    # unnormalized weights renormalize
+    assert sample_from(p * 7.0, 0.26) == 2
+
+
+def test_keyed_uniforms_deterministic_and_decorrelated():
+    s = SamplerState(SamplingParams(temperature=1.0, seed=5), req_id=3)
+    u = s.uniform(17, DRAW_ACCEPT)
+    assert 0.0 <= u < 1.0
+    assert u == s.uniform(17, DRAW_ACCEPT)      # pure function of the key
+    # sequential-stream use and reset never disturb keyed draws
+    s.sample(np.zeros(8))
+    s.reset()
+    assert u == s.uniform(17, DRAW_ACCEPT)
+    # purpose / position / req_id / seed all decorrelate
+    assert u != s.uniform(17, DRAW_DRAFT)
+    assert u != s.uniform(18, DRAW_ACCEPT)
+    assert u != SamplerState(SamplingParams(temperature=1.0, seed=5),
+                             req_id=4).uniform(17, DRAW_ACCEPT)
+    assert u != SamplerState(SamplingParams(temperature=1.0, seed=6),
+                             req_id=3).uniform(17, DRAW_ACCEPT)
+
+
+# --------------------------------------------- accept-loop exactness (unit)
+
+def _trial_samplers(n):
+    """Independent per-trial samplers at temperature 1.0 — ``probs`` is then
+    the plain softmax, so passing ``log p`` as logits makes the target
+    distribution exactly ``p``."""
+    return [SamplerState(SamplingParams(temperature=1.0, seed=t), req_id=t)
+            for t in range(n)]
+
+
+def _propose_and_accept(sampler, committed, q_rows, p_rows):
+    """One synthetic round: sample each draft from its q row with the keyed
+    DRAW_DRAFT uniform (exactly the decoder's proposal path), then run the
+    accept loop against log-p target rows."""
+    drafts, dprobs = [], []
+    for j, q in enumerate(q_rows):
+        drafts.append(sample_from(q, sampler.uniform(committed + j,
+                                                     DRAW_DRAFT)))
+        dprobs.append(q)
+    with np.errstate(divide="ignore"):
+        rows = np.log(np.asarray(p_rows))
+    return stochastic_accept(sampler, committed, drafts, dprobs, rows)
+
+
+def test_stochastic_accept_first_token_exact():
+    """Chi-squared + TV: the first committed token of a draft/verify round
+    must be distributed exactly as the target row, whatever the proposal
+    distribution (here: deliberately mismatched, so both the accept and the
+    residual-resample branches fire constantly)."""
+    rng = np.random.default_rng(0)
+    v, k, n = 6, 3, 8000
+    q_rows = rng.dirichlet(np.ones(v) * 0.8, size=k)
+    p_rows = rng.dirichlet(np.ones(v) * 0.8, size=k + 1)
+    counts = np.zeros(v)
+    accept_lens = np.zeros(k + 1, np.int64)
+    for s in _trial_samplers(n):
+        commit, m = _propose_and_accept(s, committed=11, q_rows=q_rows,
+                                        p_rows=p_rows)
+        assert 1 <= len(commit) == m + 1 <= k + 1
+        counts[commit[0]] += 1
+        accept_lens[m] += 1
+    freq = counts / n
+    tv = 0.5 * np.abs(freq - p_rows[0]).sum()
+    assert tv < 0.03, (tv, freq, p_rows[0])
+    chi2 = float((((counts - n * p_rows[0]) ** 2)
+                  / (n * p_rows[0])).sum())
+    assert chi2 < 25.7, chi2                    # chi2(df=5) p ~ 1e-4
+    # mismatched q/p must actually reject sometimes AND accept sometimes
+    assert accept_lens[0] > 0 and accept_lens[1:].sum() > 0
+
+
+def test_stochastic_accept_bonus_token_exact():
+    """Conditioned on a fully accepted round, the bonus token is an exact
+    draw from the target's (k+1)-th row."""
+    rng = np.random.default_rng(1)
+    v, k, n = 6, 2, 12000
+    # close q/p so full acceptance happens often enough to condition on
+    base = rng.dirichlet(np.ones(v) * 2.0, size=k)
+    q_rows = base
+    p_rows = np.concatenate([base, rng.dirichlet(np.ones(v) * 0.8, 1)])
+    counts = np.zeros(v)
+    hits = 0
+    for s in _trial_samplers(n):
+        commit, m = _propose_and_accept(s, committed=3, q_rows=q_rows,
+                                        p_rows=p_rows)
+        if m == k:
+            counts[commit[-1]] += 1
+            hits += 1
+    assert hits > n * 0.5                        # q == p accepts a.s.
+    freq = counts / hits
+    tv = 0.5 * np.abs(freq - p_rows[k]).sum()
+    assert tv < 0.03, (tv, freq, p_rows[k])
+
+
+def test_stochastic_accept_identical_distributions_accept_all():
+    rng = np.random.default_rng(2)
+    v, k = 8, 4
+    rows = rng.dirichlet(np.ones(v), size=k + 1)
+    for s in _trial_samplers(200):
+        commit, m = _propose_and_accept(s, committed=0, q_rows=rows[:k],
+                                        p_rows=rows)
+        assert m == k and len(commit) == k + 1
+
+
+def test_stochastic_accept_k0_is_target_draw():
+    """A k = 0 round degenerates to one keyed DRAW_TARGET draw from the
+    target row — the verify-only commit, unified through the same helper."""
+    p = np.asarray([0.1, 0.7, 0.2])
+    s = SamplerState(SamplingParams(temperature=1.0, seed=9), req_id=1)
+    commit, m = stochastic_accept(s, 5, [], [], np.log(p)[None])
+    assert m == 0 and len(commit) == 1
+    expect = sample_from(p, s.uniform(5, DRAW_TARGET))
+    assert commit[0] == expect
+
+
+# -------------------------------------------------- adaptive-k controller
+
+def _dummy_seq(max_new=100, spec_len=None):
+    seq = Sequence(req_id=0, request=Request(
+        prompt=np.zeros(4, np.int32), max_new_tokens=max_new,
+        spec_len=spec_len), row=0)
+    seq.sampler = SamplerState(None, 0)
+    return seq
+
+
+def test_adaptive_k_grows_shrinks_and_probes():
+    spec = SpecConfig(draft_rank=0.5, spec_len=4, adaptive_k=True,
+                      k_ewma=1.0, k_grow=0.8, k_shrink=0.4, k_probe=3)
+    seq = _dummy_seq()
+    assert spec.request_spec_len(seq) == 4       # starts at the cap
+    # total rejection walks k down to 0, one step per round
+    for want in (3, 2, 1, 0):
+        spec.observe_round(seq, max(seq.spec_k, 1), 0)
+        assert seq.spec_k == want
+    # parked at 0: probes with a single draft every k_probe rounds
+    assert [spec.request_spec_len(seq) for _ in range(6)] == \
+        [0, 0, 1, 0, 0, 1]
+    # a good probe (full acceptance) re-opens speculation and grows again
+    spec.observe_round(seq, 1, 1)
+    assert seq.spec_k == 1
+    spec.observe_round(seq, 1, 1)
+    assert seq.spec_k == 2
+    assert spec.request_spec_len(seq) == 2
+    # growth clamps at the per-request cap
+    for _ in range(8):
+        spec.observe_round(seq, seq.spec_k, seq.spec_k)
+    assert seq.spec_k == 4
+    # recompute resets the controller with the sequence
+    seq.reset_for_recompute()
+    assert seq.spec_k is None and seq.spec_accept_ewma is None
+    assert seq.spec_idle_rounds == 0
+
+
+def test_adaptive_k_respects_remaining_and_optout():
+    spec = SpecConfig(draft_rank=0.5, spec_len=6, adaptive_k=True)
+    assert spec.request_spec_len(_dummy_seq(max_new=3)) == 2  # remaining - 1
+    assert spec.request_spec_len(_dummy_seq(spec_len=0)) == 0  # opt-out
+    assert spec.request_spec_len(_dummy_seq(spec_len=2)) == 2  # cap override
+
+
+def test_split_spec_extras_fair_and_exact():
+    assert Scheduler.split_spec_extras([3, 3, 3], 100) == [3, 3, 3]
+    assert Scheduler.split_spec_extras([3, 3, 3], 4) == [2, 1, 1]
+    assert Scheduler.split_spec_extras([5, 1, 2], 6) == [3, 1, 2]
+    assert Scheduler.split_spec_extras([4, 4], 0) == [0, 0]
+    assert Scheduler.split_spec_extras([], 9) == []
+    assert Scheduler.split_spec_extras([2, 0, 9], -3) == [0, 0, 0]
+
+
+def test_spec_config_validation_new_knobs():
+    with pytest.raises(ValueError, match="k_ewma"):
+        SpecConfig(draft_rank=0.5, k_ewma=0.0)
+    with pytest.raises(ValueError, match="k_shrink"):
+        SpecConfig(draft_rank=0.5, k_shrink=0.9, k_grow=0.8)
+    with pytest.raises(ValueError, match="k_probe"):
+        SpecConfig(draft_rank=0.5, k_probe=0)
+
+
+# ------------------------------------------------------------ engine level
+
+def _sampled_requests(cfg, n, max_new, seed, temp=None):
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    t = TEMP if temp is None else temp
+    sampling = (SamplingParams(temperature=t, seed=seed) if t > 0 else None)
+    return [Request(prompt=prompt.copy(), max_new_tokens=max_new, budget=1.0,
+                    sampling=sampling) for _ in range(n)]
+
+
+def test_engine_distribution_matches_target_only(tiny_state):
+    """Two-sample check on a tiny vocab: token frequencies generated by the
+    stochastic-spec engine vs the target-only (non-speculative) engine.
+    Both are exact samplers of the same process, so their pooled first-token
+    and (t1, t2)-pair frequencies must agree within sampling noise. At
+    temperature 0 (the CI matrix leg) this tightens to bitwise identity."""
+    cfg = tiny_state[0]
+    spec_eng = _mk_engine(tiny_state,
+                          spec=SpecConfig(draft_rank=0.7, spec_len=3,
+                                          gap_chunk=64))
+    base_eng = _mk_engine(tiny_state, prefill_chunk=16)
+    if TEMP <= 0:
+        reqs = _sampled_requests(cfg, 4, 6, seed=0)
+        a = spec_eng.generate(reqs, mode="continuous")
+        b = base_eng.generate(reqs, mode="continuous")
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x.tokens, y.tokens)
+        return
+
+    # max_new = 3: the first token commits at prefill completion, leaving
+    # remaining = 2 at the first decode round, so position t2 is actually
+    # drafted (k is clamped to remaining - 1) and t3 is its accept fallout
+    rounds, per = 20, 16
+    firsts, pairs = {0: [], 1: []}, {0: [], 1: []}
+    drafted = 0
+    for r in range(rounds):
+        reqs = _sampled_requests(cfg, per, 3, seed=r)
+        for side, eng in enumerate((spec_eng, base_eng)):
+            for res, rq in zip(eng.generate(reqs, mode="continuous"), reqs):
+                gen = res.tokens[len(rq.prompt):]
+                firsts[side].append(int(gen[0]))
+                pairs[side].append((int(gen[0]), int(gen[1])))
+        drafted += spec_eng.last_metrics.summary()["spec_draft_tokens"]
+    assert drafted > 0, "stochastic sequences never drafted"
+
+    v = cfg.vocab_size
+    f0 = np.bincount(firsts[0], minlength=v) / len(firsts[0])
+    f1 = np.bincount(firsts[1], minlength=v) / len(firsts[1])
+    tv_first = 0.5 * np.abs(f0 - f1).sum()
+    assert tv_first < 0.15, tv_first
+    keys = sorted(set(pairs[0]) | set(pairs[1]))
+    c0 = np.asarray([pairs[0].count(k) for k in keys]) / len(pairs[0])
+    c1 = np.asarray([pairs[1].count(k) for k in keys]) / len(pairs[1])
+    tv_pair = 0.5 * np.abs(c0 - c1).sum()
+    assert tv_pair < 0.35, tv_pair
+
+
+def test_engine_replay_identity_under_mid_round_preemption(tiny_state):
+    """Forced preemption drops in-flight drafts mid-round; the keyed-draw
+    discipline makes the whole stochastic run a deterministic function of
+    the workload — two identical runs (preemptions included) must agree
+    bitwise, and every request still completes."""
+    if TEMP <= 0:
+        pytest.skip("greedy leg: covered by the token-identity matrix")
+
+    def run():
+        eng = _mk_engine(tiny_state, max_batch=2, max_len=32, block_size=4,
+                         num_blocks=9,
+                         spec=SpecConfig(draft_rank=0.7, spec_len=3,
+                                         gap_chunk=8))
+        rng = np.random.default_rng(5)
+        reqs = [Request(prompt=rng.integers(0, TINY_CFG.vocab_size, 12)
+                        .astype(np.int32), max_new_tokens=6, budget=1.0,
+                        sampling=SamplingParams(temperature=TEMP, seed=7))
+                for _ in range(2)]
+        res = eng.generate(reqs, mode="continuous")
+        return res, eng.last_metrics
+
+    r1, m1 = run()
+    r2, m2 = run()
+    assert m1.preemptions >= 1
+    assert m1.preemptions == m2.preemptions
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_engine_adaptive_k_runs_and_is_deterministic(tiny_state):
+    cfg = tiny_state[0]
+    spec = SpecConfig(draft_rank=0.7, spec_len=4, gap_chunk=64,
+                      adaptive_k=True, k_probe=2)
+    reqs = _sampled_requests(cfg, 4, 12, seed=2)
+    eng = _mk_engine(tiny_state, spec=spec)
+    r1 = eng.generate(reqs, mode="continuous")
+    s = eng.last_metrics.summary()
+    assert s["spec_rounds"] > 0
+    r2 = eng.generate(reqs, mode="continuous")
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_engine_rounds_respect_token_budget(tiny_state):
+    """Worst-case k+1 verify tokens per sequence stay under token_budget
+    every round (adaptive-k accounting), and the fair split keeps deep
+    drafters from starving their peers."""
+    cfg = tiny_state[0]
+    budget = 9                                   # 4 slots + 5 extras
+    eng = _mk_engine(tiny_state, token_budget=budget, prefill_chunk=4,
+                     spec=SpecConfig(draft_rank=0.7, spec_len=4,
+                                     gap_chunk=64))
+    reqs = _sampled_requests(cfg, 8, 10, seed=4, temp=TEMP or 0.8)
+    eng.generate(reqs, mode="continuous")
+    log = eng.last_metrics.spec_round_log
+    assert log, "no speculative rounds ran"
+    for drafted, verified, accepted, drafting in log:
+        assert verified <= budget, (verified, budget)
+        assert drafted <= verified
+
+
+def test_verify_only_fallback_matches_nonspec_engine(tiny_state):
+    """``SpecConfig(stochastic=False)`` restores the PR-3 guarantee:
+    sampled requests run k = 0 rounds off the sequential stream and are
+    token-identical to the non-speculative engine."""
+    cfg = tiny_state[0]
+    reqs = _sampled_requests(cfg, 3, 8, seed=6, temp=0.9)
+    eng = _mk_engine(tiny_state,
+                     spec=SpecConfig(draft_rank=0.7, spec_len=3,
+                                     stochastic=False))
+    base = _mk_engine(tiny_state, prefill_chunk=16)
+    res = eng.generate(reqs, mode="continuous")
+    ref = base.generate(reqs, mode="continuous")
+    for a, b in zip(res, ref):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert eng.last_metrics.summary()["spec_draft_tokens"] == 0
