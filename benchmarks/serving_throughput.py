@@ -17,9 +17,24 @@ Two workloads:
     so the TTFT gap vs the retired PR-1 batch-1-prefill engine (PR-2
     measured ~3.4x) narrows to what chunk granularity alone buys.
 
+A third workload benchmarks the **device-resident sampling pipeline**:
+
+  * ``sampling sweep`` (``--sampling-sweep``) — stochastic decode-bound
+    streams served at vocab sizes 8k/32k/128k, host-sampling engine
+    (gathered logits shipped to the host, python per-sequence sampling —
+    the PR-4 discipline) vs device-sampling engine (sample-position gather
+    + fused in-jit draw, int32 ids only). Per leg: tokens/s plus the
+    per-iteration dispatch/host wall-time split from
+    ``ServingMetrics.timing_log``. Results are checked into
+    ``benchmarks/BENCH_sampling.json``; the acceptance bar is >= 1.3x
+    tokens/s for the device leg at the 128k-vocab point.
+
 Derived columns: tokens/s per engine, the continuous/drain speedup, and the
 chunked-vs-continuous TTFT ratio with its queue/prefill breakdown.
 """
+import argparse
+import json
+import pathlib
 import time
 
 import jax
@@ -27,13 +42,15 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_config
+from repro.configs.base import FlexRankConfig, ModelConfig, Segment
 from repro.data import make_source
 from repro.launch.train import build_flexrank_state
 from repro.models import common as cm
 from repro.models import transformer as tfm
-from repro.serving import ElasticEngine, Request
+from repro.serving import ElasticEngine, Request, SamplingParams
 
 PREFILL_CHUNK = 64
+SWEEP_VOCABS = (8192, 32768, 131072)
 
 
 def _request_stream(cfg, n, rng):
@@ -78,7 +95,97 @@ def _run(engine, reqs, mode):
     return metrics, wall, gen / wall
 
 
-def main():
+def _sweep_config(vocab: int) -> ModelConfig:
+    """Decode-bound bench model: tiny stack so per-iteration cost is
+    dominated by the LM head + token emission — the path the sampling
+    pipeline changes — with the vocab as the swept variable."""
+    return ModelConfig(
+        name=f"sampling-sweep-{vocab // 1024}k", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+        vocab_size=vocab,
+        segments=(Segment("attn", 1), Segment("attn", 1)),
+        rope_base=10000.0,
+        flexrank=FlexRankConfig(enabled=True, budgets=(0.5, 1.0)),
+    )
+
+
+def _sampling_leg(cfg, state, reqs, *, device: bool):
+    eng = ElasticEngine(cfg, *state, max_batch=8, max_len=64, block_size=8,
+                        prefill_chunk=16, device_sampling=device)
+    eng.generate(reqs, mode="continuous")        # warm jit traces
+    t0 = time.perf_counter()
+    eng.generate(reqs, mode="continuous")
+    wall = time.perf_counter() - t0
+    s = eng.last_metrics.summary()
+    gen = sum(r.max_new_tokens for r in reqs)
+    return {
+        "tokens_per_s": gen / wall,
+        "wall_s": wall,
+        "dispatch_ms_mean": s["dispatch_ms_mean"],
+        "host_ms_mean": s["host_ms_mean"],
+        "dispatch_s_total": s["dispatch_s_total"],
+        "host_s_total": s["host_s_total"],
+    }
+
+
+def sampling_sweep(out_path="benchmarks/BENCH_sampling.json"):
+    """Host- vs device-sampling tokens/s across vocab sizes. Stochastic
+    (temperature 0.8) decode-bound stream: the host leg ships the gathered
+    ``[S, vocab]`` logits rows off-device and samples per sequence in
+    python (the PR-4 discipline, already including the sample-position
+    gather fix); the device leg fuses the draw into the jitted step and
+    transfers int32 ids only, so the gap isolates where sampling runs."""
+    results = []
+    for vocab in SWEEP_VOCABS:
+        cfg = _sweep_config(vocab)
+        rng = np.random.default_rng(0)
+        source = make_source(cfg.vocab_size, 64, 4, seed=0)
+        dense = cm.instantiate(tfm.model_spec(cfg), jax.random.PRNGKey(0))
+        state = build_flexrank_state(cfg, dense, source)
+        reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 8)
+                        .astype(np.int32), max_new_tokens=32, budget=1.0,
+                        sampling=SamplingParams(temperature=0.8, seed=i))
+                for i in range(8)]
+        host = _sampling_leg(cfg, state, reqs, device=False)
+        dev = _sampling_leg(cfg, state, reqs, device=True)
+        speedup = dev["tokens_per_s"] / host["tokens_per_s"]
+        results.append({"vocab": vocab, "host": host, "device": dev,
+                        "device_speedup": speedup})
+        emit(f"sampling_host_{vocab // 1024}k", host["wall_s"] * 1e6,
+             f"{host['tokens_per_s']:.1f}")
+        emit(f"sampling_device_{vocab // 1024}k", dev["wall_s"] * 1e6,
+             f"{dev['tokens_per_s']:.1f}")
+        emit(f"sampling_device_speedup_{vocab // 1024}k",
+             dev["wall_s"] * 1e6, f"{speedup:.2f}x")
+        print(f"# vocab {vocab}: host dispatch/host ms "
+              f"{host['dispatch_ms_mean']:.2f}/{host['host_ms_mean']:.2f}, "
+              f"device {dev['dispatch_ms_mean']:.2f}/"
+              f"{dev['host_ms_mean']:.2f}")
+    top = results[-1]["device_speedup"]
+    if top < 1.3:
+        print(f"# WARNING: device sampling speedup {top:.2f}x < 1.3x at "
+              f"the {SWEEP_VOCABS[-1]}-vocab point")
+    payload = {"workload": "stochastic decode-bound, temperature 0.8, "
+                           "B=8, max_new=32, prefill_chunk=16",
+               "results": results}
+    path = pathlib.Path(out_path)
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {path}")
+
+
+def main(argv=()):
+    # argv defaults to empty (NOT sys.argv): the benchmarks.run harness
+    # imports this module and calls main() in-process, so parsing the
+    # harness's own argv here would SystemExit the whole run
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sampling-sweep", action="store_true",
+                    help="run the host-vs-device sampling vocab sweep "
+                         "instead of the classic serving workloads; "
+                         "refreshes benchmarks/BENCH_sampling.json")
+    args = ap.parse_args(list(argv))
+    if args.sampling_sweep:
+        sampling_sweep()
+        return
     cfg = get_config("gpt2-small", smoke=True)
     rng = np.random.default_rng(0)
     source = make_source(cfg.vocab_size, 64, 4, seed=0)
@@ -146,4 +253,5 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(sys.argv[1:])

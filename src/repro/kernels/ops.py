@@ -20,6 +20,7 @@ from repro.kernels.mamba2_ssd import ssd
 from repro.kernels.paged_attention import (paged_attention,
                                            paged_prefill_attention)
 from repro.kernels.rwkv6_wkv import wkv6
+from repro.kernels.sampling import topk_mask_sample
 
 
 def _mode(use_pallas):
@@ -123,6 +124,43 @@ def paged_prefill_attention_forward(q, k_pool, v_pool, block_tables, slot_ids,
     return ref.paged_prefill_attention_ref(q, k_pool, v_pool, block_tables,
                                            slot_ids, context_lens,
                                            softcap=softcap, window=window)
+
+
+def topk_mask_sample_forward(logits, temperature, top_k, u, *,
+                             return_probs: bool = False, use_pallas=False):
+    """Fused temperature/top-k warp + one categorical draw per logits row
+    (the device sampling pipeline's warp step).
+
+    logits: (S, V); temperature: (S,) — ``<= 0`` means greedy argmax;
+    top_k: (S,) int32 (0 = no truncation) or ``None`` when no row in the
+    batch truncates (skips the threshold sort entirely — the common greedy
+    / pure-temperature serving case); u: (S,) keyed uniforms in [0, 1).
+    Returns ``tokens (S,) int32`` (plus the warped ``probs (S, V)`` when
+    ``return_probs`` — the speculative draft phase keeps it as ``q``).
+
+    The per-row top-k *threshold* (k-th largest scaled logit) needs global
+    ranking, so it is computed here with one device sort and handed to the
+    kernel / oracle as a cutoff value; the streaming warp + inverse-CDF
+    draw is what the Pallas kernel fuses.
+    """
+    temperature = jnp.asarray(temperature, jnp.float32)
+    u = jnp.asarray(u, jnp.float32)
+    if top_k is None:
+        threshold = None                       # no row truncates: no sort,
+    else:                                      # no masking pass
+        z = (logits.astype(jnp.float32)
+             / jnp.maximum(temperature, 1e-30)[:, None])
+        threshold = ref.topk_threshold_ref(z, jnp.asarray(top_k, jnp.int32))
+    run, interp = _mode(use_pallas)
+    if run:
+        thr = (threshold if threshold is not None
+               else jnp.full(logits.shape[:1], -jnp.inf, jnp.float32))
+        return topk_mask_sample(logits, temperature, thr, u,
+                                return_probs=return_probs,
+                                interpret=interp)
+    tokens, probs = ref.topk_mask_sample_ref(logits, temperature, threshold,
+                                             u, return_probs=return_probs)
+    return (tokens, probs) if return_probs else tokens
 
 
 def wkv6_forward(r, k, v, w, u, *, chunk: int = 64, use_pallas=False):

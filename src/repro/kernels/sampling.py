@@ -1,0 +1,176 @@
+"""Pallas fused sampling kernel: temperature/top-k warp + categorical draw.
+
+``topk_mask_sample`` is the device-resident warp step of the serving
+sampling pipeline: given a batch of gathered logits rows (one per sample
+position of a mixed serving iteration), per-row sampler knobs, and one
+keyed uniform per row, it emits the sampled token ids without ever
+materializing the warped probability tensor in HBM (unless the caller asks
+for it — the speculative draft phase keeps the warped distribution ``q``
+for the accept test).
+
+Grid is (S, 2, NBV): rows outermost, then a two-pass sweep over vocab
+blocks, innermost sequential —
+
+  * **pass 0** accumulates the flash-style running ``(max, denom)`` of the
+    masked, temperature-scaled logits (the softmax normalizer) plus the raw
+    argmax for greedy rows (``temperature <= 0``);
+  * **pass 1** re-streams the same blocks, forms the unnormalized
+    exponentials, and counts CDF entries ``<= u * denom`` — the count IS
+    the inverse-CDF sample (same ``searchsorted(side="right")`` boundary
+    rule as ``ref.sample_cdf_ref`` and the host
+    ``serving.sampling.sample_from``), using a per-block ``cumsum`` plus a
+    running block-total carried in scratch.
+
+The top-k cutoff arrives as a per-row *threshold* on the scaled logits
+(-inf = no truncation), computed by the ``ops.py`` wrapper with one
+device-side sort — ranking needs global context, the warp + draw does not,
+so only the latter lives in the kernel's streaming form. Scalar operands
+(temperature, threshold, uniform) ride scalar prefetch.
+
+Tests validate via interpret mode against ``ref.topk_mask_sample_ref``;
+like the paged-attention kernels, real-TPU tiling (V blocks to lane
+multiples) is handled by the wrapper's padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _sample_kernel(temp_ref, thr_ref, u_ref, logits_ref, tok_ref, *rest,
+                   bv: int, v: int, return_probs: bool):
+    if return_probs:
+        probs_ref, m_ref, l_ref, best_ref, bidx_ref, cum_ref, cnt_ref = rest
+    else:
+        m_ref, l_ref, best_ref, bidx_ref, cum_ref, cnt_ref = rest
+    i = pl.program_id(0)
+    pass_ = pl.program_id(1)
+    j = pl.program_id(2)
+    nbv = pl.num_programs(2)
+    temp = temp_ref[i]
+    thr = thr_ref[i]
+    u = u_ref[i]
+
+    @pl.when((pass_ == 0) & (j == 0))
+    def _init():
+        m_ref[0, 0] = NEG_INF
+        l_ref[0, 0] = 0.0
+        best_ref[0, 0] = NEG_INF
+        bidx_ref[0, 0] = 0
+        cum_ref[0, 0] = 0.0
+        cnt_ref[0, 0] = 0
+
+    x = logits_ref[0].astype(jnp.float32)                    # (bv,)
+    col = j * bv + jax.lax.broadcasted_iota(jnp.int32, (1, bv), 1)[0]
+    # warp: temperature scale + threshold mask (pads carry NEG_INF already)
+    zz = jnp.where(x / jnp.maximum(temp, 1e-30) >= thr,
+                   x / jnp.maximum(temp, 1e-30), NEG_INF)
+
+    @pl.when(pass_ == 0)
+    def _normalizer():
+        # greedy running argmax (strict > keeps the first occurrence)
+        bm = jnp.max(x)
+        arg = j * bv + jnp.argmax(x).astype(jnp.int32)
+        better = bm > best_ref[0, 0]
+        bidx_ref[0, 0] = jnp.where(better, arg, bidx_ref[0, 0])
+        best_ref[0, 0] = jnp.maximum(best_ref[0, 0], bm)
+        # flash (max, denom) for the warped softmax
+        m_prev = m_ref[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(zz))
+        l_ref[0, 0] = (l_ref[0, 0] * jnp.exp(m_prev - m_new)
+                       + jnp.sum(jnp.exp(zz - m_new)))
+        m_ref[0, 0] = m_new
+
+    @pl.when(pass_ == 1)
+    def _draw():
+        e = jnp.exp(zz - m_ref[0, 0])                        # (bv,)
+        target = u * l_ref[0, 0]
+        cs = cum_ref[0, 0] + jnp.cumsum(e)
+        cnt_ref[0, 0] = cnt_ref[0, 0] + jnp.sum(
+            (cs <= target).astype(jnp.int32))
+        cum_ref[0, 0] = cum_ref[0, 0] + jnp.sum(e)
+        if return_probs:
+            one_hot = (col == bidx_ref[0, 0]).astype(jnp.float32)
+            probs_ref[0] = jnp.where(temp > 0.0, e / l_ref[0, 0], one_hot)
+
+        @pl.when(j == nbv - 1)
+        def _emit():
+            drawn = jnp.minimum(cnt_ref[0, 0], v - 1)
+            tok_ref[0, 0] = jnp.where(temp > 0.0, drawn, bidx_ref[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("bv", "return_probs",
+                                             "interpret"))
+def topk_mask_sample(logits: jax.Array, temperature: jax.Array,
+                     threshold: jax.Array, u: jax.Array, *, bv: int = 2048,
+                     return_probs: bool = False,
+                     interpret: bool = False):
+    """Fused warp + categorical draw over gathered logits rows.
+
+    Contract (see docs/kernels.md):
+
+    * ``logits``: (S, V) float — one row per sample position (decode slots,
+      finishing prefill chunks, draft emissions of a serving iteration).
+    * ``temperature``: (S,) float32 — ``<= 0`` means greedy: the row's
+      token is the raw argmax and ``u`` is ignored.
+    * ``threshold``: (S,) float32 — top-k cutoff on the *scaled* logits
+      (row keeps entries ``>= threshold``); -inf disables truncation. The
+      ``ops.topk_mask_sample_forward`` wrapper derives it from per-row
+      ``top_k`` with one sort.
+    * ``u``: (S,) float32 in [0, 1) — one keyed uniform per row
+      (``serving.device_sampling.keyed_uniform``).
+
+    Returns ``tokens (S,) int32``, plus ``probs (S, V) float32`` (the
+    warped distribution actually sampled from; one-hot for greedy rows)
+    when ``return_probs`` — the speculative draft phase keeps it as ``q``.
+    """
+    s, v = logits.shape
+    bv = min(bv, max(v, 1))
+    pad = (-v) % bv
+    if pad:
+        logits = jnp.pad(logits, ((0, 0), (0, pad)),
+                         constant_values=NEG_INF)
+    nbv = logits.shape[1] // bv
+
+    out_shape = [jax.ShapeDtypeStruct((s, 1), jnp.int32)]
+    out_specs = [pl.BlockSpec((1, 1), lambda i, p, j, t, th, uu: (i, 0))]
+    if return_probs:
+        out_shape.append(jax.ShapeDtypeStruct((s, logits.shape[1]),
+                                              jnp.float32))
+        out_specs.append(
+            pl.BlockSpec((1, bv), lambda i, p, j, t, th, uu: (i, j)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(s, 2, nbv),
+        in_specs=[
+            pl.BlockSpec((1, bv), lambda i, p, j, t, th, uu: (i, j)),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),     # running max
+            pltpu.VMEM((1, 1), jnp.float32),     # running denom
+            pltpu.VMEM((1, 1), jnp.float32),     # greedy best value
+            pltpu.VMEM((1, 1), jnp.int32),       # greedy best index
+            pltpu.VMEM((1, 1), jnp.float32),     # CDF carry across blocks
+            pltpu.VMEM((1, 1), jnp.int32),       # entries <= target so far
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_sample_kernel, bv=bv, v=v,
+                          return_probs=return_probs),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(temperature.astype(jnp.float32), threshold.astype(jnp.float32),
+      u.astype(jnp.float32), logits)
+    tokens = out[0][:, 0]
+    if return_probs:
+        return tokens, out[1][:, :v]
+    return tokens

@@ -77,6 +77,11 @@ def main(argv=None):
                          "(0 = greedy argmax)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="top-k truncation when sampling (0 = off)")
+    ap.add_argument("--host-sampling", action="store_true",
+                    help="sample on the host (the oracle path: gathered "
+                         "logits ship off-device, python per-sequence "
+                         "draws) instead of the default device-resident "
+                         "fused sampling")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -96,7 +101,8 @@ def main(argv=None):
                            prefill_chunk=args.prefill_chunk or None,
                            token_budget=args.token_budget or None,
                            prefill_order=args.prefill_order,
-                           spec=spec)
+                           spec=spec,
+                           device_sampling=not args.host_sampling)
 
     budgets = [float(b) for b in args.budgets.split(",")]
     sampling = (SamplingParams(temperature=args.temperature,
@@ -121,6 +127,9 @@ def main(argv=None):
               f"first-decode {s['ttft_first_decode_mean_s']*1e3:.1f}), "
               f"cache occupancy peak {s['cache_occupancy_peak']:.2f}, "
               f"preemptions {s['preemptions']}")
+        print(f"# iteration split: dispatch {s['dispatch_ms_mean']:.2f} ms "
+              f"/ host {s['host_ms_mean']:.2f} ms "
+              f"({'device' if not args.host_sampling else 'host'} sampling)")
         if args.prefill_chunk:
             print(f"# chunked prefill: chunk={args.prefill_chunk}, "
                   f"budget={engine.token_budget}, "

@@ -762,14 +762,24 @@ def paged_mixed_step(
       {'slot_ids':  (T,) block-table row per token (pads -> a null row),
        'positions': (T,) 0-based position of each token in its sequence,
        'block_tables': (B(+null rows), MB),
-       'segments': [{'k': (count, NB, BS, Hkv, D), 'v': ...} per segment]}
+       'segments': [{'k': (count, NB, BS, Hkv, D), 'v': ...} per segment],
+       'sample_ids': optional (S,) flat-token indices to score}
 
     Each token's K/V is scattered into its slot's blocks, then it attends
     over its own ``position + 1`` keys — so one dispatch advances every
     decoding sequence by a token AND pushes prefill chunks through, instead
-    of stopping the world for a batch-1 prompt forward. Returns (logits
-    (1, T, V), new caches); logits at a chunk's final prompt token seed the
-    sequence's first generated token.
+    of stopping the world for a batch-1 prompt forward.
+
+    **Sample-position gather**: when ``sample_ids`` is present, the LM head
+    (and final norm) run only over the gathered hidden rows — the decode
+    slots and chunk-final tokens whose next-token distributions are
+    actually read — so the ``[T, vocab]`` logits tensor of the original
+    mixed step shrinks to ``[S, vocab]``: mid-chunk prompt tokens never
+    pay the vocab matmul. Returns (logits (1, S, V), new caches); without
+    ``sample_ids`` the full (1, T, V) rows come back (kernel parity tests
+    and the speculative decoder's host-oracle path use this form). Logits
+    at a chunk's final prompt token seed the sequence's first generated
+    token.
     """
     assert paged_compatible(cfg), cfg.name
     slot_ids = caches["slot_ids"]
@@ -784,10 +794,12 @@ def paged_mixed_step(
             ranks=attn_ranks, use_pallas=use_pallas)
 
     x, segments = _run_paged_segments(params, cfg, x, caches, ranks, attn_fn)
-    return lm_logits(params, x, cfg), {"slot_ids": slot_ids,
-                                       "positions": positions,
-                                       "block_tables": block_tables,
-                                       "segments": segments}
+    new_caches = {"slot_ids": slot_ids, "positions": positions,
+                  "block_tables": block_tables, "segments": segments}
+    if "sample_ids" in caches:
+        x = jnp.take(x, caches["sample_ids"], axis=1)
+        new_caches["sample_ids"] = caches["sample_ids"]
+    return lm_logits(params, x, cfg), new_caches
 
 
 def paged_verify_step(
@@ -813,14 +825,20 @@ def paged_verify_step(
     therefore token-identical to non-speculative decoding, and rejected
     suffixes are rolled back host-side with ``PagedKVCache.truncate_slot``.
 
-    Return contract: the FULL ``(1, T, V)`` logits rows, never an argmax
-    reduction. Greedy acceptance only needs the per-position argmax, but
-    stochastic speculative sampling compares whole distributions — the
-    accept test ``min(1, p_tgt(x) / p_draft(x))`` and the residual resample
-    ``max(p_tgt - p_draft, 0)`` both need the target row's complete
-    per-position logits, warped host-side by the request's sampler
-    (``serving.sampling.SamplerState.probs``). Reducing on device would
-    silently forfeit distributional exactness for sampled requests.
+    Return contract: the logits rows named by ``caches['sample_ids']``
+    (all of them, ``(1, T, V)``, when the gather operand is absent). The
+    old "full-logits-rows" contract — ship every scored row to the host so
+    the accept test could compare whole distributions there — is retired:
+    the device-resident pipeline gathers exactly the ``k+1`` verify rows
+    per sequence (plus riding chunk-final rows) and runs the accept test
+    ``min(1, p_tgt(x) / p_draft(x))`` and residual resample
+    ``max(p_tgt - p_draft, 0)`` *inside* the jitted round
+    (``serving.device_sampling.paged_verify_accept_step`` wraps this step
+    with ``device_accept``), so a draft/verify round returns
+    ``(accepted_len, tokens)`` as int32 instead of two full logits
+    tensors. The host sampler path (``ElasticEngine(device_sampling=
+    False)``) still consumes the gathered rows host-side as the test
+    oracle.
 
     Sharing the ``paged_mixed_step`` body (same ``_run_paged_segments``
     loop, same ``paged_prefill_attention`` kernel) is deliberate: the PR-2

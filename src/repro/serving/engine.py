@@ -42,17 +42,25 @@ decode tokens are reserved first, so a long prefill can never starve
 running decodes), ``prefill_order`` (``"fifo"`` admission order vs
 ``"srpf"`` shortest-remaining-prefill-first when budget spills over),
 ``spec`` (a ``repro.spec.SpecConfig`` turning on speculative decoding;
-per-request override via ``Request.spec_len``). Sampling is per-request
-(``Request.sampling``): greedy argmax by default, temperature / top-k with
-a resettable per-request PRNG stream otherwise (recompute after preemption
-replays identical draws). See ``scheduler`` for the waiting -> prefilling
--> decoding state machine.
+per-request override via ``Request.spec_len``), ``device_sampling``
+(default True; the ``REPRO_DEVICE_SAMPLING`` env knob flips the default).
+Sampling is per-request (``Request.sampling``): greedy argmax by default,
+temperature / top-k otherwise. With device sampling the whole
+token-emission path is device-resident — the forward gathers only the
+sample positions for the LM head and draws in-jit with
+``(seed, req_id, purpose, position)``-keyed counter-based PRNG, so each
+iteration transfers int32 ids only and recompute after preemption replays
+identical draws by construction; ``device_sampling=False`` keeps the host
+sampler (sequential per-request numpy stream, the test oracle — greedy
+stays bit-identical across the two paths). See ``scheduler`` for the
+waiting -> prefilling -> decoding state machine.
 
 Families outside the paged path (mamba/rwkv/zamba/MLA/enc-dec) fall back to
 the drain-batch engine, itself upgraded to single-pass prefill.
 """
 from __future__ import annotations
 
+import os
 import warnings
 from typing import Dict, List, Optional, TYPE_CHECKING
 
@@ -63,10 +71,11 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import flexrank as FR
 from repro.models import transformer as tfm
+from repro.serving import device_sampling as dsamp
 from repro.serving.batcher import ContinuousBatcher
 from repro.serving.kv_cache import CacheOOM, PagedKVCache
 from repro.serving.metrics import ServingMetrics
-from repro.serving.sampling import SamplerState
+from repro.serving.sampling import DRAW_TARGET, SamplerState
 from repro.serving.scheduler import (BudgetRouter, Request, Result, Scheduler,
                                      Sequence)
 
@@ -84,6 +93,7 @@ class ElasticEngine:
                  token_budget: Optional[int] = None,
                  prefill_order: str = "fifo",
                  spec: "Optional[SpecConfig]" = None,
+                 device_sampling: Optional[bool] = None,
                  use_pallas=False):
         self.cfg = cfg
         self.params_fact = params_fact
@@ -122,6 +132,18 @@ class ElasticEngine:
         self._mixed_budget = (token_budget if token_budget is not None
                               else max_batch + self._chunk)
         self.spec = spec
+        # device-resident sampling (the default): every iteration's LM head
+        # runs only over the gathered sample positions and the
+        # temperature/top-k draw happens in-jit, so the host receives int32
+        # token ids instead of a [T, vocab] logits tensor.
+        # ``device_sampling=False`` keeps the host sampler as the oracle
+        # path (sequential-stream draws, PR-4 bit-identical); the
+        # REPRO_DEVICE_SAMPLING env knob flips the default for whole test
+        # suites (the CI sampling matrix).
+        if device_sampling is None:
+            env = os.environ.get("REPRO_DEVICE_SAMPLING")
+            device_sampling = env != "0" if env is not None else True
+        self.device_sampling = bool(device_sampling)
         self._deployed: Dict[int, object] = {}
         # deployed-param cost per budget row, computed ONCE (the seed redid
         # this O(rows) scan inside every routing call)
@@ -145,6 +167,29 @@ class ElasticEngine:
         # so sharing the jit object shares its compile cache — a row served
         # both speculatively and not compiles each width bucket once
         self._verify_jit = self._mixed_jit
+        # device-resident sampling path: the fused forward + in-jit draw
+        # returns int32 token ids only (probs variant feeds the speculative
+        # draft phase, which keeps the warped q rows on device for the
+        # accept test); the verify variant fuses Leviathan acceptance
+        self._sample_jit = jax.jit(
+            lambda p, caches, tok, sampling: dsamp.paged_sample_step(
+                p, self.cfg, caches, tok, sampling,
+                use_pallas=self.use_pallas),
+            donate_argnums=(1,))
+        self._sample_probs_jit = jax.jit(
+            lambda p, caches, tok, sampling: dsamp.paged_sample_step(
+                p, self.cfg, caches, tok, sampling,
+                use_pallas=self.use_pallas, return_probs=True),
+            donate_argnums=(1,))
+        self._verify_accept_jit = jax.jit(
+            lambda p, caches, tok, accept, chunk_sampling:
+            dsamp.paged_verify_accept_step(
+                p, self.cfg, caches, tok, accept, chunk_sampling,
+                use_pallas=self.use_pallas),
+            donate_argnums=(1,))
+        self._drain_sample_jit = jax.jit(
+            lambda rows, sampling: dsamp.sample_rows(
+                rows, sampling, use_pallas=self.use_pallas))
 
     # ------------------------------------------------------------ routing
 
@@ -288,7 +333,15 @@ class ElasticEngine:
                          results: Dict[int, Result]) -> None:
         """One budget row's chunked-prefill loop: every iteration advances
         the whole decode batch by one token and pushes FIFO prompt chunks
-        through the same fused forward, under ``token_budget`` tokens."""
+        through the same fused forward, under ``token_budget`` tokens.
+
+        Token emission is device-resident by default: the forward gathers
+        only the sample positions (decode slots + finishing chunks) for the
+        LM head and samples in-jit, so each iteration transfers int32 token
+        ids only. ``device_sampling=False`` keeps the host oracle: the
+        gathered ``[S, vocab]`` rows ship to the host, greedy argmaxes just
+        those rows on device, stochastic rows draw off the sequential
+        sampler stream (PR-4 bit-identical)."""
         params = self._realize(row)
         cache = PagedKVCache(self.cfg, max_batch=self.max_batch,
                              max_len=self.max_len, block_size=self.block_size,
@@ -296,6 +349,7 @@ class ElasticEngine:
         batcher = ContinuousBatcher(self.max_batch)
 
         while True:
+            it0 = metrics.now()
             # admission: seat waiting requests; blocks arrive per chunk
             for slot in batcher.free_slots():
                 if not sched.has_waiting(row):
@@ -336,16 +390,45 @@ class ElasticEngine:
                 self._unstick(sched, cache, batcher, metrics)
                 continue
 
-            logits = self._dispatch_mixed(params, cache, batcher,
-                                          decode_slots, chunks)
-            sampled = np.array(jnp.argmax(logits[0], axis=-1), np.int32)
+            # sample plan: only decode slots and finishing chunks ever have
+            # their next-token distribution read — mid-chunk prompt tokens
+            # get no LM-head row at all (sample-position gather)
+            sample_ids, metas = [], []
+            for i, slot in enumerate(decode_slots):
+                seq = batcher.slots[slot]
+                sample_ids.append(i)
+                metas.append((seq.sampler, DRAW_TARGET,
+                              seq.prompt_len + len(seq.generated)))
+            flat = len(decode_slots)
+            finish_rows: Dict[int, int] = {}
+            for slot, seq, start, n in chunks:
+                if start + n == seq.prompt_len:
+                    finish_rows[slot] = len(sample_ids)
+                    sample_ids.append(flat + n - 1)
+                    metas.append((seq.sampler, DRAW_TARGET, seq.prompt_len))
+                flat += n
+
+            disp0 = metrics.now()
+            if self.device_sampling:
+                logits = None
+                sampled = self._dispatch_mixed(params, cache, batcher,
+                                               decode_slots, chunks,
+                                               sample_ids, metas)
+            else:
+                logits = self._dispatch_mixed(params, cache, batcher,
+                                              decode_slots, chunks,
+                                              sample_ids)
+                # greedy fast path: argmax only the gathered sample rows,
+                # never the full flat-token batch
+                sampled = np.array(jnp.argmax(logits[0], axis=-1), np.int32)
+            disp_s = metrics.now() - disp0
 
             # commit decodes first: `advance` must only see sequences that
             # actually decoded this iteration, not freshly flipped ones
             sampled_b = np.zeros(self.max_batch, np.int32)
             for i, slot in enumerate(decode_slots):
                 seq = batcher.slots[slot]
-                if not seq.sampler.greedy:
+                if logits is not None and not seq.sampler.greedy:
                     sampled[i] = seq.sampler.sample(np.asarray(logits[0, i]))
                 sampled_b[slot] = sampled[i]
                 metrics.on_token(seq.req_id)
@@ -354,9 +437,8 @@ class ElasticEngine:
                 cache.free_slot(slot)
                 self._finish(seq, metrics, results)
 
-            # commit prefill chunks; flat index of a chunk's last token is
-            # its offset right after the decode batch
-            flat = len(decode_slots)
+            # commit prefill chunks; a finishing chunk's first generated
+            # token sits at its reserved sample row
             total_chunk = 0
             for slot, seq, start, n in chunks:
                 seq.prefill_pos = start + n
@@ -364,10 +446,11 @@ class ElasticEngine:
                 metrics.on_prefill_chunk(n)
                 if seq.prefill_pos == seq.prompt_len:
                     metrics.on_prefill_end(seq.req_id)
-                    first = int(sampled[flat + n - 1])
-                    if not seq.sampler.greedy:
+                    ri = finish_rows[slot]
+                    first = int(sampled[ri])
+                    if logits is not None and not seq.sampler.greedy:
                         first = seq.sampler.sample(
-                            np.asarray(logits[0, flat + n - 1]))
+                            np.asarray(logits[0, ri]))
                     seq.generated.append(first)
                     metrics.on_first_token(seq.req_id)
                     if seq.done:             # max_new_tokens == 1
@@ -376,9 +459,10 @@ class ElasticEngine:
                         self._finish(seq, metrics, results)
                     else:
                         batcher.to_decoding(slot, first)
-                flat += n
             metrics.on_mixed_step(len(decode_slots), total_chunk,
                                   cache.occupancy())
+            metrics.on_iteration_timing(disp_s,
+                                        metrics.now() - it0 - disp_s)
 
     @staticmethod
     def _pack_flat(entries, width: int, null_slot: int):
@@ -399,9 +483,74 @@ class ElasticEngine:
             i += n
         return tok, sid, pos
 
-    def _dispatch_mixed(self, params, cache, batcher, decode_slots, chunks):
-        """Build the flat token batch (decode tokens then chunks, padded to a
-        width bucket) and run one fused ``paged_mixed_step``."""
+    @staticmethod
+    def _bucket_rows(n: int) -> int:
+        """Sample-row width bucket (power of two, floor 4) — O(log B) jit
+        traces over the gathered LM-head width."""
+        t = 4
+        while t < n:
+            t *= 2
+        return t
+
+    @staticmethod
+    def _pack_sample_ids(sample_ids, width: int) -> np.ndarray:
+        """Gather indices padded to ``width``; pads score flat token 0 and
+        are discarded host-side (keyed draws are stateless, so the wasted
+        pad draws cannot disturb any sequence's stream)."""
+        out = np.zeros(width, np.int32)
+        out[: len(sample_ids)] = sample_ids
+        return out
+
+    @staticmethod
+    def _sampler_fields(sampler, temp, topk, seed, req, i: int) -> None:
+        """Write one non-greedy sampler's device knobs into row ``i`` of
+        the packed operand arrays — the ONE place the host sampler's key
+        is exported to the device keying (mixed iterations and speculative
+        accept operands must agree bitwise, or cross-engine token identity
+        breaks). The seed keeps its low 32 bits (int32 view; the host
+        generator rejects negatives, so user seeds are non-negative and
+        collisions need seeds 2^32 apart)."""
+        temp[i] = sampler.params.temperature
+        topk[i] = sampler.params.top_k
+        seed[i] = np.int64(sampler.seed).astype(np.uint32).view(np.int32)
+        req[i] = sampler.req_id
+
+    @staticmethod
+    def _pack_sampling(metas, width: int) -> Dict:
+        """Device-sampling operands for ``width`` gathered rows. ``metas``:
+        one ``(sampler, purpose, position)`` per live row, aligned with
+        ``sample_ids``. Greedy rows carry temperature 0 (in-jit argmax);
+        ``top_k`` collapses to None when no row truncates so the common
+        case never pays the threshold sort (a distinct jit trace)."""
+        temp = np.zeros(width, np.float32)
+        topk = np.zeros(width, np.int32)
+        seed = np.zeros(width, np.int32)
+        req = np.zeros(width, np.int32)
+        purpose = np.zeros(width, np.int32)
+        pos = np.zeros(width, np.int32)
+        for i, (sampler, pur, p) in enumerate(metas):
+            if not sampler.greedy:
+                ElasticEngine._sampler_fields(sampler, temp, topk, seed,
+                                              req, i)
+            purpose[i] = pur
+            pos[i] = p
+        return {
+            "temperature": jnp.asarray(temp),
+            "top_k": jnp.asarray(topk) if topk.any() else None,
+            "seed": jnp.asarray(seed), "req_id": jnp.asarray(req),
+            "purpose": jnp.asarray(purpose), "position": jnp.asarray(pos),
+        }
+
+    def _dispatch_mixed(self, params, cache, batcher, decode_slots, chunks,
+                        sample_ids, metas=None):
+        """Build the flat token batch (decode tokens then chunks, padded to
+        a width bucket) and run one fused forward over it.
+
+        With ``metas`` (device-sampling path) the step samples in-jit and
+        returns the (S_pad,) int32 tokens as a host array — the whole
+        device->host traffic of the iteration. Without it, returns the
+        gathered (1, S_pad, V) logits rows for host-side sampling (the
+        oracle path)."""
         entries = [(slot, [batcher.next_token(slot)],
                     cache.slots[slot].num_tokens - 1)
                    for slot in decode_slots]
@@ -411,14 +560,25 @@ class ElasticEngine:
         used = len(decode_slots) + sum(n for _, _, _, n in chunks)
         width = self._bucket_tokens(used)
         tok, sid, pos = self._pack_flat(entries, width, self.max_batch)
+        rows = self._bucket_rows(len(sample_ids))
         caches = {
             "slot_ids": jnp.asarray(sid),
             "positions": jnp.asarray(pos),
             "block_tables": cache.device_tables(cache.active_max_blocks(),
                                                 null_rows=1),
             "segments": cache.pools,
+            "sample_ids": jnp.asarray(self._pack_sample_ids(sample_ids,
+                                                            rows)),
         }
-        logits, new_caches = self._mixed_jit(params, caches, jnp.asarray(tok[None]))
+        if metas is not None:
+            sampling = self._pack_sampling(metas, rows)
+            tokens, new_caches = self._sample_jit(params, caches,
+                                                  jnp.asarray(tok[None]),
+                                                  sampling)
+            cache.update_pools(new_caches)
+            return np.asarray(tokens)
+        logits, new_caches = self._mixed_jit(params, caches,
+                                             jnp.asarray(tok[None]))
         cache.update_pools(new_caches)
         return logits
 
@@ -473,7 +633,17 @@ class ElasticEngine:
             for i, t in enumerate(toks):
                 padded[i, : len(t)] = t
 
-            def _next(logits_last):
+            def _next(logits_last, step):
+                # device path: same keyed DRAW_TARGET discipline as the
+                # continuous engines (position = true sequence index, so a
+                # request draws identical device tokens through every
+                # engine path); host path keeps the sequential stream
+                if self.device_sampling:
+                    metas = [(s, DRAW_TARGET, len(toks[i]) + step)
+                             for i, s in enumerate(samplers)]
+                    sampling = self._pack_sampling(metas, b)
+                    return np.asarray(self._drain_sample_jit(
+                        logits_last, sampling))[:, None]
                 cur = np.array(jnp.argmax(logits_last, axis=-1),
                                np.int32)[:, None]
                 for i, s in enumerate(samplers):
@@ -482,11 +652,11 @@ class ElasticEngine:
                 return cur
 
             logits, state = self._prefill_jit(params, state, jnp.asarray(padded))
-            cur = _next(logits[:, -1])
+            cur = _next(logits[:, -1], 0)
             outs = [padded, cur]
-            for _ in range(max_new - 1):
+            for t in range(max_new - 1):
                 logits, state = self._decode_jit(params, state, jnp.asarray(cur))
-                cur = _next(logits[:, 0])
+                cur = _next(logits[:, 0], t + 1)
                 outs.append(cur)
             seq = np.concatenate(outs, axis=1)
             dp = self.router.deployed_params(row)

@@ -1,7 +1,9 @@
 """Serving metrics: tokens/s, time-to-first-token (broken into queue /
 prefill / first-decode), KV-cache occupancy, per-iteration token-budget
-accounting for mixed prefill/decode iterations, and draft/verify acceptance
-accounting for speculative decoding rounds.
+accounting for mixed prefill/decode iterations, a per-iteration
+dispatch/host wall-time split (the device-resident sampling pipeline's
+observable), and draft/verify acceptance accounting for speculative
+decoding rounds.
 
 Collected host-side by the engine loop (one sample per scheduler iteration)
 — cheap enough to stay on for production traffic.
@@ -77,6 +79,12 @@ class ServingMetrics:
         # one (draft_tokens, verify_tokens, accepted_tokens, drafting_seqs)
         # tuple per speculative round — the draft/verify audit trail
         self.spec_round_log: List[Tuple[int, int, int, int]] = []
+        # one (dispatch_s, host_s) pair per iteration: device time (jit
+        # dispatch + sync + the iteration's device->host transfer) vs host
+        # time (planning, commits, python sampling on the host-oracle
+        # path) — the observable the device-resident sampling pipeline is
+        # meant to shrink
+        self.timing_log: List[Tuple[float, float]] = []
         self.draft_tokens = 0
         self.accepted_draft_tokens = 0
         self.drafting_seq_rounds = 0
@@ -150,6 +158,14 @@ class ServingMetrics:
         self.accepted_draft_tokens += accepted_tokens
         self.drafting_seq_rounds += drafting_seqs
 
+    def on_iteration_timing(self, dispatch_s: float, host_s: float) -> None:
+        """One iteration's device/host wall-time split. ``dispatch_s``:
+        jitted forward (and fused sampling) including the sync on its
+        outputs; ``host_s``: everything else the iteration spent on the
+        host — scheduling, cache bookkeeping, commits, and (on the
+        host-sampling oracle path) the per-row python sampling loop."""
+        self.timing_log.append((dispatch_s, max(host_s, 0.0)))
+
     def on_token(self, req_id: int) -> None:
         self.traces[req_id].new_tokens += 1
 
@@ -186,6 +202,10 @@ class ServingMetrics:
             "ttft_first_decode_mean_s": _mean([p[2] for p in parts]),
             "decode_steps": self.decode_steps,
             "mixed_iterations": len(self.iteration_log),
+            "dispatch_ms_mean": _mean([t[0] for t in self.timing_log]) * 1e3,
+            "host_ms_mean": _mean([t[1] for t in self.timing_log]) * 1e3,
+            "dispatch_s_total": sum(t[0] for t in self.timing_log),
+            "host_s_total": sum(t[1] for t in self.timing_log),
             "preemptions": self.preemptions,
             "cache_occupancy_mean": _mean(occ),
             "cache_occupancy_peak": max(occ) if occ else 0.0,

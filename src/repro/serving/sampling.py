@@ -27,6 +27,16 @@ Two PRNG disciplines coexist, split off the same ``(seed, req_id)`` key:
     cannot. The ``DRAW_*`` purposes keep the proposal, accept-test, and
     residual-resample uniforms of one position mutually independent.
 
+This module is host-side numpy and doubles as the **test oracle** for the
+device-resident pipeline: ``serving.device_sampling`` ports the keyed-draw
+discipline onto JAX's counter-based PRNG (``fold_in`` over the same
+``(seed, req_id, purpose, position)`` tuple) and fuses the warp + draw into
+the jitted serving step, so engines with ``device_sampling=True`` (the
+default) never ship logits to the host. Greedy tokens are bit-identical
+across the two; stochastic tokens agree in distribution (the uniforms come
+from different generators), which is what the chi-squared/TV equivalence
+suite in ``tests/test_device_sampling.py`` pins.
+
 For speculative decoding the sampler also exposes its *warped distribution*
 (``probs``): the temperature/top-k-transformed categorical the request
 actually samples from. Stochastic speculative acceptance (accept draft ``x``
@@ -94,6 +104,10 @@ class SamplerState:
 
     def __init__(self, params: Optional[SamplingParams], req_id: int):
         self.params = params or GREEDY
+        # the stream key, public: the device sampling pipeline exports it
+        # as the (seed, req_id) half of its fold_in chain
+        self.seed = int(self.params.seed)
+        self.req_id = int(req_id)
         self._key = (self.params.seed, req_id)
         self._rng: Optional[np.random.Generator] = None
         self.reset()

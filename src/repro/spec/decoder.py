@@ -70,6 +70,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -77,7 +78,8 @@ from repro.serving.batcher import ContinuousBatcher
 from repro.serving.kv_cache import CacheOOM, PagedKVCache
 from repro.serving.metrics import ServingMetrics
 from repro.serving.sampling import (DRAW_ACCEPT, DRAW_DRAFT, DRAW_RESIDUAL,
-                                    SamplerState, sample_from, sample_token)
+                                    DRAW_TARGET, SamplerState, sample_from,
+                                    sample_token)
 from repro.serving.scheduler import Scheduler, Sequence
 
 from repro.spec.config import SpecConfig
@@ -136,8 +138,11 @@ class RoundPlan:
     k: int                       # draft proposals this round (may be 0)
     drafts: List[int] = dataclasses.field(default_factory=list)
     # warped draft distribution per proposal (stochastic sequences only):
-    # the accept test needs q, not just the proposed token
+    # the accept test needs q, not just the proposed token. Host path:
+    # float64 numpy rows; device path: float32 rows that never leave the
+    # device (``q_rows``) — they flow straight into the fused verify step
     draft_probs: List[np.ndarray] = dataclasses.field(default_factory=list)
+    q_rows: List = dataclasses.field(default_factory=list)
 
 
 class SpecDecoder:
@@ -168,6 +173,8 @@ class SpecDecoder:
             block_size=engine.block_size, num_blocks=engine.num_blocks)
         self.batcher = ContinuousBatcher(engine.max_batch)
         self._round_tables = None    # device block tables, valid per round
+        self._disp_s = 0.0           # per-round device-dispatch seconds
+        self._zero_q_cache: Dict[int, object] = {}
         chunk = engine.prefill_chunk or engine.max_len
         self.prefill_chunk = chunk
         # verify-token budget per round; prefill chunks take the leftover
@@ -178,6 +185,15 @@ class SpecDecoder:
 
     def _draft_slot(self, seat: int) -> int:
         return self.max_batch + seat
+
+    def _zero_q(self, k_cap: int):
+        """Cached (k_cap, V) zero proposal rows — q padding for greedy /
+        pad plans in the fused accept operands (allocating fresh
+        full-vocab zeros every round would sit in the decode hot loop)."""
+        if k_cap not in self._zero_q_cache:
+            self._zero_q_cache[k_cap] = jnp.zeros(
+                (k_cap, self.cfg.vocab_size), jnp.float32)
+        return self._zero_q_cache[k_cap]
 
     def _free_pair(self, seat: int) -> None:
         """Free BOTH of a seat's cache slots (the paired-slot discipline:
@@ -210,6 +226,8 @@ class SpecDecoder:
     def serve(self) -> None:
         eng, sched = self.engine, self.sched
         while True:
+            it0 = self.metrics.now()
+            self._disp_s = 0.0
             # admission: seat waiting requests with a slot PAIR each
             for seat in self.batcher.free_slots():
                 if not sched.has_waiting(self.row):
@@ -242,9 +260,15 @@ class SpecDecoder:
             # copy could not be reused across dispatches)
             self._round_tables = self.cache.host_tables(
                 self.cache.active_max_blocks(), null_rows=1)
-            self._draft_phase(plans)
-            self._verify_and_commit(plans, chunks)
+            if eng.device_sampling:
+                self._draft_phase_device(plans)
+                self._verify_and_commit_device(plans, chunks)
+            else:
+                self._draft_phase(plans)
+                self._verify_and_commit(plans, chunks)
             self._round_tables = None
+            self.metrics.on_iteration_timing(
+                self._disp_s, self.metrics.now() - it0 - self._disp_s)
 
     # ----------------------------------------------------------- planning
 
@@ -385,7 +409,10 @@ class SpecDecoder:
             "block_tables": jnp.asarray(self._round_tables),
             "segments": self.cache.pools,
         }
+        t0 = self.metrics.now()
         logits, new_caches = fn(params, caches, jnp.asarray(tok[None]))
+        jax.block_until_ready(logits)
+        self._disp_s += self.metrics.now() - t0
         self.cache.update_pools(new_caches)
         return logits[0]            # device array: callers argmax on device
 
@@ -444,6 +471,244 @@ class SpecDecoder:
             greedy = np.asarray(jnp.argmax(logits, axis=-1))
             for i, p in enumerate(live):
                 self._propose(p, greedy, logits, i, step)
+
+    # ----------------------------------- device-resident draft + verify
+
+    def _dispatch_device(self, jit_fn, params, entries, sample_ids, width,
+                         *extra):
+        """One fused flat-token forward on the device-sampling path:
+        gathers ``sample_ids`` for the LM head (padded to ``width``), runs
+        the jitted step, and returns its outputs (int32 tokens / accept
+        results — the round's whole device->host traffic) synced to host
+        timing."""
+        eng = self.engine
+        used = sum(len(t) for _, t, _ in entries)
+        tok, sid, pos = eng._pack_flat(entries, self._bucket(used),
+                                       2 * self.max_batch)
+        caches = {
+            "slot_ids": jnp.asarray(sid),
+            "positions": jnp.asarray(pos),
+            "block_tables": jnp.asarray(self._round_tables),
+            "segments": self.cache.pools,
+            "sample_ids": jnp.asarray(
+                eng._pack_sample_ids(sample_ids, width)),
+        }
+        t0 = self.metrics.now()
+        out = jit_fn(params, caches, jnp.asarray(tok[None]), *extra)
+        self.cache.update_pools(out[-1])
+        jax.block_until_ready(out[:-1])
+        self._disp_s += self.metrics.now() - t0
+        return out[:-1]
+
+    def _record_draft(self, emitters, tokens, probs) -> None:
+        """Record one draft dispatch's proposals: tokens land host-side,
+        the warped q rows of stochastic drafters stay on device for the
+        fused accept test."""
+        for i, p in enumerate(emitters):
+            p.drafts.append(int(tokens[i]))
+            if not p.seq.sampler.greedy:
+                p.q_rows.append(probs[i])
+
+    def _draft_phase_device(self, plans: List[RoundPlan]) -> None:
+        """Autoregressive draft proposals with in-jit sampling: greedy
+        drafters argmax on device, stochastic drafters draw their
+        position-keyed ``DRAW_DRAFT`` proposal in-jit and the proposal
+        distribution ``q`` never visits the host — each step transfers one
+        int32 per drafting sequence."""
+        eng = self.engine
+        # step 1: gap feeds + first proposal for plans that can draft
+        entries, emitters, sample_ids = [], [], []
+        for p in plans:
+            if p.gap_fed == 0:
+                continue
+            committed = (list(map(int, p.seq.request.prompt))
+                         + p.seq.generated)
+            dslot = self._draft_slot(p.seat)
+            start = (self.cache.slots[dslot].num_tokens
+                     - p.gap_fed - max(0, p.k - 1))
+            entries.append((dslot, committed[start: start + p.gap_fed],
+                            start))
+            if p.k > 0:
+                emitters.append(p)
+                sample_ids.append(sum(len(t) for _, t, _ in entries) - 1)
+        if not entries:
+            return
+        metas = [(p.seq.sampler, DRAW_DRAFT, p.committed) for p in emitters]
+        self._record_draft(emitters, *self._draft_step(
+            entries, sample_ids, metas))
+
+        # steps 2..k: one proposal per participating sequence per step
+        max_k = max((p.k for p in plans), default=0)
+        for step in range(2, max_k + 1):
+            live = [p for p in plans if p.k >= step]
+            entries = [(self._draft_slot(p.seat), [p.drafts[-1]],
+                        p.committed + step - 2) for p in live]
+            metas = [(p.seq.sampler, DRAW_DRAFT, p.committed + step - 1)
+                     for p in live]
+            self._record_draft(live, *self._draft_step(
+                entries, list(range(len(live))), metas))
+
+    def _draft_step(self, entries, sample_ids, metas):
+        """One draft-row dispatch; returns host tokens and (device) q rows
+        — the probs output is only materialized when a stochastic drafter
+        actually emits this step (a distinct jit trace)."""
+        eng = self.engine
+        width = eng._bucket_rows(len(sample_ids))
+        sampling = eng._pack_sampling(metas, width)
+        want_probs = any(not sampler.greedy for sampler, _, _ in metas)
+        if want_probs:
+            ((tokens, probs),) = self._dispatch_device(
+                eng._sample_probs_jit, self.draft_params, entries,
+                sample_ids, width, sampling)
+        else:
+            (tokens,) = self._dispatch_device(
+                eng._sample_jit, self.draft_params, entries, sample_ids,
+                width, sampling)
+            probs = None
+        return np.asarray(tokens), probs
+
+    def _verify_and_commit_device(self, plans: List[RoundPlan],
+                                  chunks) -> None:
+        """The fused device round: ONE ``paged_verify_accept_step`` scores
+        every plan's ``k+1`` positions, runs Leviathan accept/resample (or
+        the greedy prefix rule) in-jit, and samples the finishing chunks'
+        first tokens — the host receives ``(accepted_len, commit tokens)``
+        per sequence as int32 and replays only the cache rollback."""
+        eng, metrics = self.engine, self.metrics
+        entries = []
+        for p in plans:
+            feed = self.batcher.next_token(p.seat)
+            entries.append((p.seat, [feed] + p.drafts, p.committed - 1))
+        for seat, seq, start, n in chunks:
+            entries.append((seat,
+                            list(map(int, seq.request.prompt[start:
+                                                             start + n])),
+                            start))
+
+        # gathered-row layout (static per trace): P_pad verify runs of
+        # exactly k_cap+1 rows — short runs repeat their first row — then
+        # the finishing chunks' final-token rows
+        k_cap = max([self.spec.spec_len] + [p.k for p in plans])
+        p_pad = 1
+        while p_pad < max(len(plans), 1):
+            p_pad *= 2
+        sample_ids: List[int] = []
+        off = 0
+        for p in plans:
+            ids = list(range(off, off + p.k + 1))
+            sample_ids += ids + [off] * (k_cap + 1 - len(ids))
+            off += p.k + 1
+        sample_ids += [0] * ((p_pad - len(plans)) * (k_cap + 1))
+        chunk_meta, finish_rows = [], {}
+        flat = off
+        for seat, seq, start, n in chunks:
+            if start + n == seq.prompt_len:
+                finish_rows[seat] = len(chunk_meta)
+                sample_ids.append(flat + n - 1)
+                chunk_meta.append((seq.sampler, DRAW_TARGET,
+                                   seq.prompt_len))
+            flat += n
+        c_pad = 0
+        if chunk_meta:
+            c_pad = 1
+            while c_pad < len(chunk_meta):
+                c_pad *= 2
+            sample_ids += [0] * (c_pad - len(chunk_meta))
+
+        # accept operands; q rows ride along on device only when some plan
+        # is stochastic (greedy-only rounds skip the warp entirely)
+        drafts = np.zeros((p_pad, k_cap), np.int32)
+        ks = np.zeros(p_pad, np.int32)
+        committed = np.zeros(p_pad, np.int32)
+        temp = np.zeros(p_pad, np.float32)
+        topk = np.zeros(p_pad, np.int32)
+        seed = np.zeros(p_pad, np.int32)
+        req = np.zeros(p_pad, np.int32)
+        any_stoch = False
+        q_rows = []
+        zero_q = self._zero_q(k_cap)
+        for pi, p in enumerate(plans):
+            drafts[pi, : p.k] = p.drafts
+            ks[pi] = p.k
+            committed[pi] = p.committed
+            s = p.seq.sampler
+            if not s.greedy:
+                any_stoch = True
+                eng._sampler_fields(s, temp, topk, seed, req, pi)
+            if p.q_rows:
+                q_rows.append(jnp.concatenate(
+                    [jnp.stack(p.q_rows), zero_q[len(p.q_rows):]])
+                    if len(p.q_rows) < k_cap else jnp.stack(p.q_rows))
+            else:
+                q_rows.append(zero_q)
+        accept = {"k": jnp.asarray(ks), "drafts": jnp.asarray(drafts),
+                  "committed": jnp.asarray(committed),
+                  "temperature": jnp.asarray(temp)}
+        if any_stoch:
+            accept["seed"] = jnp.asarray(seed)
+            accept["req_id"] = jnp.asarray(req)
+            if topk.any():
+                accept["top_k"] = jnp.asarray(topk)
+            accept["q"] = jnp.stack(q_rows
+                                    + [zero_q] * (p_pad - len(plans)))
+        chunk_sampling = (eng._pack_sampling(chunk_meta, c_pad)
+                          if chunk_meta else None)
+
+        commit_d, m_d, chunk_d = self._dispatch_device(
+            eng._verify_accept_jit, self.target_params, entries, sample_ids,
+            len(sample_ids), accept, chunk_sampling)
+        commit_h, m_h = np.asarray(commit_d), np.asarray(m_d)
+        chunk_h = None if chunk_d is None else np.asarray(chunk_d)
+
+        # host-side commit: extend sequences, roll back rejected tails
+        drafted = verified = accepted_total = committed_total = 0
+        drafting_seqs = sum(1 for p in plans if p.k > 0)
+        for pi, p in enumerate(plans):
+            m = int(m_h[pi])
+            commit = [int(x) for x in commit_h[pi, : m + 1]]
+            commit = commit[: p.seq.remaining]
+            self.spec.observe_round(p.seq, p.k, m)
+            drafted += p.k
+            verified += p.k + 1
+            accepted_total += m
+            committed_total += len(commit)
+            p.seq.generated.extend(commit)
+            for _ in commit:
+                metrics.on_token(p.seq.req_id)
+            if p.seq.done:
+                self.batcher.leave(p.seat)
+                self._free_pair(p.seat)
+                eng._finish(p.seq, metrics, self.results)
+                continue
+            self.cache.truncate_slot(p.seat, p.committed + m)
+            if p.k > 0:
+                self.cache.truncate_slot(
+                    self._draft_slot(p.seat),
+                    min(p.committed + m, p.committed + p.k - 1))
+            self.batcher.feed(p.seat, commit[-1])
+
+        total_chunk = 0
+        for seat, seq, start, n in chunks:
+            seq.prefill_pos = start + n
+            total_chunk += n
+            metrics.on_prefill_chunk(n)
+            if seq.prefill_pos == seq.prompt_len:
+                metrics.on_prefill_end(seq.req_id)
+                first = int(chunk_h[finish_rows[seat]])
+                seq.generated.append(first)
+                metrics.on_first_token(seq.req_id)
+                if seq.done:                     # max_new_tokens == 1
+                    self.batcher.leave(seat)
+                    self._free_pair(seat)
+                    eng._finish(seq, metrics, self.results)
+                else:
+                    self.batcher.to_decoding(seat, first)
+
+        metrics.on_mixed_step(committed_total, total_chunk,
+                              self.cache.occupancy())
+        if plans:
+            metrics.on_spec_round(drafted, verified, accepted_total,
+                                  drafting_seqs)
 
     # ----------------------------------------------------------- commit
 

@@ -91,9 +91,12 @@ def _sampled_requests(cfg, seed=11):
 
 def test_sampled_stream_identical_across_engines(smoke_state):
     """The same sampled request draws the same tokens through every engine
-    path — drain, PR-1 continuous, and chunked prefill — because the
-    per-request PRNG stream is keyed by (seed, req_id) and every path
-    samples from the same greedy-exact logits."""
+    path — drain, PR-1 continuous, and chunked prefill — because every
+    path samples from the same greedy-exact logits with the same draws:
+    the (seed, req_id)-keyed sequential stream on the host path, the
+    (seed, req_id, purpose, position)-keyed device draws on the
+    device-sampling path (both run under the REPRO_DEVICE_SAMPLING CI
+    matrix)."""
     cfg = smoke_state[0]
     reqs = _sampled_requests(cfg)
     drain = _mk_engine(smoke_state, max_batch=4).generate_drain(reqs)
