@@ -29,8 +29,18 @@ A third workload benchmarks the **device-resident sampling pipeline**:
     ``benchmarks/BENCH_sampling.json``; the acceptance bar is >= 1.3x
     tokens/s for the device leg at the 128k-vocab point.
 
+A fourth measures the **observability overhead** (``--obs-overhead``):
+
+  * the same decode-bound stream served with observability fully off
+    (NULL_TRACER, no registry — the default no-op fast path) vs fully on
+    (event tracing + metrics registry). Best-of-N tokens/s per leg;
+    results land in ``benchmarks/BENCH_obs.json`` and the acceptance bar
+    is < 3% tokens/s cost for the enabled leg.
+
 Derived columns: tokens/s per engine, the continuous/drain speedup, and the
-chunked-vs-continuous TTFT ratio with its queue/prefill breakdown.
+chunked-vs-continuous TTFT ratio with its queue/prefill breakdown. Every
+classic run also exports one schema-validated Chrome trace of the
+continuous workload to ``benchmarks/traces/`` (Perfetto-loadable).
 """
 import argparse
 import json
@@ -47,6 +57,7 @@ from repro.data import make_source
 from repro.launch.train import build_flexrank_state
 from repro.models import common as cm
 from repro.models import transformer as tfm
+from repro.obs import MetricsRegistry, make_tracer, validate_chrome_trace
 from repro.serving import ElasticEngine, Request, SamplingParams
 
 PREFILL_CHUNK = 64
@@ -173,6 +184,76 @@ def sampling_sweep(out_path="benchmarks/BENCH_sampling.json"):
     print(f"# wrote {path}")
 
 
+def export_trace(engine, reqs, path):
+    """Re-serve ``reqs`` once with tracing flipped on and export the run's
+    Chrome trace (the engine reads its ``tracer`` per generate() call, so
+    jit caches and GAR rows carry over and only this extra pass pays the
+    event cost — the timed legs stay untraced)."""
+    prev = engine.tracer
+    engine.tracer = make_tracer(True)
+    try:
+        engine.generate(reqs, mode="continuous")
+        obj = engine.tracer.to_chrome()
+        problems = validate_chrome_trace(obj)
+        assert not problems, problems
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(obj) + "\n")
+        print(f"# trace: {len(obj['traceEvents'])} events -> {path}")
+    finally:
+        engine.tracer = prev
+
+
+def obs_overhead(out_path="benchmarks/BENCH_obs.json", reps=3):
+    """Tokens/s with observability fully on (tracing + registry) vs fully
+    off (the default no-op path) on the decode-bound stream. Best-of-N per
+    leg, interleaved so host-load drift hits both alike."""
+    cfg = _sweep_config(SWEEP_VOCABS[0])
+    rng = np.random.default_rng(0)
+    source = make_source(cfg.vocab_size, 64, 4, seed=0)
+    dense = cm.instantiate(tfm.model_spec(cfg), jax.random.PRNGKey(0))
+    state = build_flexrank_state(cfg, dense, source)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 8)
+                    .astype(np.int32), max_new_tokens=32, budget=1.0)
+            for _ in range(8)]
+    gen = sum(r.max_new_tokens for r in reqs)
+
+    def mk(**kw):
+        return ElasticEngine(cfg, *state, max_batch=8, max_len=64,
+                             block_size=8, prefill_chunk=16, **kw)
+
+    off = mk(tracer=make_tracer(False))
+    on = mk(tracer=make_tracer(True), registry=MetricsRegistry())
+    off.generate(reqs, mode="continuous")            # warm jit traces
+    on.generate(reqs, mode="continuous")
+    wall_off = wall_on = None
+    for _ in range(reps):
+        _, w, _ = _run(off, reqs, "continuous")
+        wall_off = w if wall_off is None or w < wall_off else wall_off
+        _, w, _ = _run(on, reqs, "continuous")
+        wall_on = w if wall_on is None or w < wall_on else wall_on
+    tps_off, tps_on = gen / wall_off, gen / wall_on
+    overhead = 1.0 - tps_on / tps_off
+    emit("obs_off", wall_off * 1e6, f"{tps_off:.1f}")
+    emit("obs_on", wall_on * 1e6, f"{tps_on:.1f}")
+    emit("obs_overhead_pct", wall_on * 1e6, f"{overhead * 100:.2f}%")
+    if overhead > 0.03:
+        print(f"# WARNING: observability overhead {overhead * 100:.2f}% "
+              "> 3% tokens/s acceptance bar")
+    payload = {
+        "workload": "greedy decode-bound, B=8, max_new=32, "
+                    "prefill_chunk=16, vocab=8192, best-of-%d" % reps,
+        "off": {"tokens_per_s": tps_off, "wall_s": wall_off},
+        "on": {"tokens_per_s": tps_on, "wall_s": wall_on,
+               "trace_events": len(on.tracer)},
+        "overhead_frac": overhead,
+        "acceptance": "overhead_frac < 0.03",
+    }
+    path = pathlib.Path(out_path)
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {path}")
+
+
 def main(argv=()):
     # argv defaults to empty (NOT sys.argv): the benchmarks.run harness
     # imports this module and calls main() in-process, so parsing the
@@ -182,9 +263,16 @@ def main(argv=()):
                     help="run the host-vs-device sampling vocab sweep "
                          "instead of the classic serving workloads; "
                          "refreshes benchmarks/BENCH_sampling.json")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="measure tracing+metrics overhead (on vs off "
+                         "tokens/s) instead of the classic workloads; "
+                         "refreshes benchmarks/BENCH_obs.json")
     args = ap.parse_args(list(argv))
     if args.sampling_sweep:
         sampling_sweep()
+        return
+    if args.obs_overhead:
+        obs_overhead()
         return
     cfg = get_config("gpt2-small", smoke=True)
     rng = np.random.default_rng(0)
@@ -250,6 +338,10 @@ def main(argv=()):
     if tps_k < tps_b * 0.95:
         print(f"# WARNING: chunked ({tps_k:.1f} tok/s) fell behind "
               f"continuous ({tps_b:.1f} tok/s)")
+
+    # one schema-validated Chrome trace per benchmark run (untimed pass)
+    export_trace(chunked, ls_reqs,
+                 "benchmarks/traces/serving_throughput.trace.json")
 
 
 if __name__ == "__main__":

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
+from benchmarks.serving_throughput import export_trace
 from repro.configs.base import FlexRankConfig, ModelConfig, Segment
 from repro.core.flexrank import group_infos
 from repro.data import make_source
@@ -238,6 +239,11 @@ def main():
     if speedup < 1.2:
         print(f"# WARNING: best stochastic spec speedup {speedup:.2f}x "
               "< 1.2x acceptance target at temperature 0.8")
+
+    # one schema-validated Chrome trace of a speculative run (untimed
+    # pass at the greedy sweep's best point)
+    eng.spec = SpecConfig(draft_rank=draft, spec_len=k)
+    export_trace(eng, reqs, "benchmarks/traces/spec_decode.trace.json")
 
 
 if __name__ == "__main__":

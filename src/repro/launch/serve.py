@@ -22,6 +22,7 @@ import argparse
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.data import make_source
 from repro.launch.train import build_flexrank_state
@@ -82,6 +83,19 @@ def main(argv=None):
                          "logits ship off-device, python per-sequence "
                          "draws) instead of the default device-resident "
                          "fused sampling")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON of the run here "
+                         "(loads in Perfetto / chrome://tracing; a .jsonl "
+                         "suffix writes one event per line instead)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write Prometheus text exposition of the run's "
+                         "metrics registry here (a .jsonl suffix appends "
+                         "a flat snapshot line instead)")
+    ap.add_argument("--jax-profile", default="", metavar="DIR",
+                    help="bracket the serve in a jax.profiler device trace "
+                         "written to DIR (TensorBoard/Perfetto-loadable); "
+                         "also turns on TraceAnnotation scopes around the "
+                         "jitted dispatches")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -95,6 +109,8 @@ def main(argv=None):
                        stochastic=not args.spec_no_stochastic,
                        adaptive_k=args.spec_adaptive_k)
             if args.spec_draft_rank else None)
+    tracer = obs.make_tracer(True) if args.trace_out else None
+    registry = obs.MetricsRegistry() if args.metrics_out else None
     engine = ElasticEngine(cfg, params_fact, table, infos,
                            max_batch=args.max_batch, max_len=args.max_len,
                            block_size=args.block_size,
@@ -102,7 +118,8 @@ def main(argv=None):
                            token_budget=args.token_budget or None,
                            prefill_order=args.prefill_order,
                            spec=spec,
-                           device_sampling=not args.host_sampling)
+                           device_sampling=not args.host_sampling,
+                           tracer=tracer, registry=registry)
 
     budgets = [float(b) for b in args.budgets.split(",")]
     sampling = (SamplingParams(temperature=args.temperature,
@@ -114,7 +131,20 @@ def main(argv=None):
         reqs.append(Request(prompt=prompt, max_new_tokens=args.max_new,
                             budget=budgets[i % len(budgets)],
                             sampling=sampling))
-    results = engine.generate(reqs, mode=args.engine)
+    with obs.profiling.profile(args.jax_profile):
+        results = engine.generate(reqs, mode=args.engine)
+    if args.trace_out:
+        if args.trace_out.endswith(".jsonl"):
+            engine.tracer.export_jsonl(args.trace_out)
+        else:
+            engine.tracer.export_chrome(args.trace_out)
+        print(f"# trace: {len(engine.tracer)} events -> {args.trace_out}")
+    if args.metrics_out:
+        if args.metrics_out.endswith(".jsonl"):
+            registry.snapshot_jsonl(args.metrics_out)
+        else:
+            registry.write_prometheus(args.metrics_out)
+        print(f"# metrics -> {args.metrics_out}")
     for i, (rq, rs) in enumerate(zip(reqs, results)):
         print(f"req {i}: budget={rq.budget:.2f} -> row {rs.budget_row} "
               f"({rs.deployed_params:,} params) tokens={rs.tokens[:12].tolist()}...")

@@ -1,0 +1,16 @@
+"""Observability for the elastic serving stack: structured event tracing
+(Chrome trace-event / JSONL export), a Prometheus-style metrics registry,
+and ``jax.profiler`` hooks. See ``docs/observability.md``."""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry)
+from repro.obs.tracer import (CAT_ALLOC, CAT_ITER, CAT_REQUEST, CAT_SCHED,
+                              CAT_SPEC, NULL_TRACER, NullTracer, Tracer,
+                              make_tracer, request_tid,
+                              validate_chrome_trace)
+from repro.obs import profiling
+
+__all__ = [
+    "CAT_ALLOC", "CAT_ITER", "CAT_REQUEST", "CAT_SCHED", "CAT_SPEC",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "NULL_TRACER",
+    "NullTracer", "Tracer", "make_tracer", "profiling", "request_tid",
+    "validate_chrome_trace",
+]

@@ -1,0 +1,72 @@
+"""Profiling hooks: optional ``jax.profiler`` integration for the serving
+stack.
+
+``annotate(name)`` wraps a host-side region in a
+``jax.profiler.TraceAnnotation`` scope — the engine uses it around its
+``paged_mixed_step``/``paged_verify_step``/sampling dispatches so the
+device trace's XLA ops line up with named host regions (and with the
+``Tracer``'s host spans, which share the same wall clock). When no
+profile is active the call returns a shared reusable null context, so the
+hot loop pays one function call and a flag check per dispatch.
+
+``start(dir)``/``stop()`` bracket a ``jax.profiler`` device trace
+(TensorBoard/Perfetto-loadable); ``profile(dir)`` is the context-manager
+form and a no-op when ``dir`` is falsy, which is how the launcher wires
+its ``--jax-profile <dir>`` flag:
+
+    with profiling.profile(args.jax_profile):
+        engine.generate(...)
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+__all__ = ["annotate", "start", "stop", "profile", "active"]
+
+_active = False
+_NULL_CTX = contextlib.nullcontext()
+
+
+def active() -> bool:
+    return _active
+
+
+def annotate(name: str):
+    """TraceAnnotation scope when a profile is running, else a shared
+    null context (reentrant and reusable — safe to hand out every call)."""
+    if not _active:
+        return _NULL_CTX
+    import jax
+    return jax.profiler.TraceAnnotation(name)
+
+
+def start(log_dir: str) -> None:
+    """Start a device trace into ``log_dir`` and turn annotations on."""
+    global _active
+    import jax
+    jax.profiler.start_trace(log_dir)
+    _active = True
+
+
+def stop() -> None:
+    global _active
+    if not _active:
+        return
+    import jax
+    _active = False
+    jax.profiler.stop_trace()
+
+
+@contextlib.contextmanager
+def profile(log_dir: Optional[str]):
+    """Bracket a region with a device trace when ``log_dir`` is set; a
+    transparent no-op otherwise."""
+    if not log_dir:
+        yield
+        return
+    start(log_dir)
+    try:
+        yield
+    finally:
+        stop()

@@ -71,6 +71,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import flexrank as FR
 from repro.models import transformer as tfm
+from repro.obs import CAT_ITER, CAT_SCHED, make_tracer, profiling
 from repro.serving import device_sampling as dsamp
 from repro.serving.batcher import ContinuousBatcher
 from repro.serving.kv_cache import CacheOOM, PagedKVCache
@@ -94,6 +95,7 @@ class ElasticEngine:
                  prefill_order: str = "fifo",
                  spec: "Optional[SpecConfig]" = None,
                  device_sampling: Optional[bool] = None,
+                 tracer=None, registry=None,
                  use_pallas=False):
         self.cfg = cfg
         self.params_fact = params_fact
@@ -144,6 +146,16 @@ class ElasticEngine:
             env = os.environ.get("REPRO_DEVICE_SAMPLING")
             device_sampling = env != "0" if env is not None else True
         self.device_sampling = bool(device_sampling)
+        # observability (repro.obs): ``tracer`` collects structured span/
+        # instant events (request lifecycle, iteration phases, scheduler
+        # decisions, allocator traffic) for Chrome-trace/JSONL export —
+        # None resolves via the REPRO_TRACE env knob to the no-op
+        # NULL_TRACER, whose hot-loop cost is one attribute check per
+        # guarded call site. ``registry`` (a repro.obs.MetricsRegistry)
+        # keeps Prometheus-exportable counters/gauges/histograms; None
+        # disables that path entirely.
+        self.tracer = tracer if tracer is not None else make_tracer()
+        self.registry = registry
         self._deployed: Dict[int, object] = {}
         # deployed-param cost per budget row, computed ONCE (the seed redid
         # this O(rows) scan inside every routing call)
@@ -239,9 +251,10 @@ class ElasticEngine:
     def _generate_continuous(self, requests: List[Request], *,
                              metrics: Optional[ServingMetrics] = None
                              ) -> List[Result]:
-        metrics = metrics or ServingMetrics()
+        metrics = metrics or ServingMetrics(tracer=self.tracer,
+                                            registry=self.registry)
         self.last_metrics = metrics
-        sched = Scheduler(self.router)
+        sched = Scheduler(self.router, tracer=self.tracer)
         submitted = []
         for r in requests:
             if len(r.prompt) == 0:
@@ -284,14 +297,25 @@ class ElasticEngine:
         return [s for s in batcher.active_sequences()
                 if cache.slots[batcher.slot_of(s)].blocks]
 
-    def _evict(self, victim, sched, cache, batcher, metrics) -> int:
+    def _evict(self, victim, sched, cache, batcher, metrics,
+               reason: str = "cache_pressure") -> int:
         """Preempt one sequence: free its slot + blocks, re-queue at the row
-        front for recompute. Returns the vacated slot."""
+        front for recompute. Returns the vacated slot. ``reason`` lands in
+        the scheduler-decision trace event (the why of the preemption:
+        ``cache_pressure`` — a decoding slot could not reserve its next
+        token — or ``prefill_pinned`` — every block was held by
+        half-prefilled sequences and nothing could move)."""
         vslot = batcher.slot_of(victim)
+        vstate = victim.state                # requeue resets it to waiting
         batcher.leave(vslot)
         cache.free_slot(vslot)
         sched.requeue_front(victim)
         metrics.on_preempt(victim.req_id)
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "preempt", CAT_SCHED,
+                args={"req": victim.req_id, "slot": vslot, "reason": reason,
+                      "policy": "youngest_first", "state": vstate})
         return vslot
 
     def _reserve_or_preempt(self, sched, cache, batcher, metrics):
@@ -307,7 +331,8 @@ class ElasticEngine:
                         and batcher.num_active == 1):
                     raise CacheOOM(
                         f"sequence {victim.req_id} alone exceeds the pool")
-                vslot = self._evict(victim, sched, cache, batcher, metrics)
+                vslot = self._evict(victim, sched, cache, batcher, metrics,
+                                    reason="cache_pressure")
                 if vslot == slot:
                     break                      # the appender itself was evicted
             seq = batcher.slots[slot]
@@ -346,7 +371,9 @@ class ElasticEngine:
         cache = PagedKVCache(self.cfg, max_batch=self.max_batch,
                              max_len=self.max_len, block_size=self.block_size,
                              num_blocks=self.num_blocks)
+        cache.tracer = self.tracer
         batcher = ContinuousBatcher(self.max_batch)
+        tr = self.tracer
 
         while True:
             it0 = metrics.now()
@@ -356,6 +383,11 @@ class ElasticEngine:
                     break
                 seq = sched.pop(row)
                 metrics.on_admit(seq.req_id)
+                if tr.enabled:
+                    tr.instant("admit", CAT_SCHED,
+                               args={"req": seq.req_id, "row": row,
+                                     "slot": slot, "reason": "slot_free",
+                                     "attempt": seq.admissions})
                 if seq.request.max_new_tokens <= 0:
                     self._finish(seq, metrics, results)
                     continue
@@ -409,6 +441,10 @@ class ElasticEngine:
                 flat += n
 
             disp0 = metrics.now()
+            if tr.enabled:
+                tr.complete("plan", CAT_ITER, it0, disp0,
+                            args={"decode": len(decode_slots),
+                                  "chunks": len(chunks)})
             if self.device_sampling:
                 logits = None
                 sampled = self._dispatch_mixed(params, cache, batcher,
@@ -461,8 +497,19 @@ class ElasticEngine:
                         batcher.to_decoding(slot, first)
             metrics.on_mixed_step(len(decode_slots), total_chunk,
                                   cache.occupancy())
-            metrics.on_iteration_timing(disp_s,
-                                        metrics.now() - it0 - disp_s)
+            it1 = metrics.now()
+            metrics.on_iteration_timing(disp_s, it1 - it0 - disp_s)
+            if tr.enabled:
+                tr.complete("dispatch", CAT_ITER, disp0, disp0 + disp_s,
+                            args={"sample_rows": len(sample_ids)})
+                tr.complete("commit", CAT_ITER, disp0 + disp_s, it1,
+                            args={"decode": len(decode_slots),
+                                  "prefill": total_chunk})
+            if self.registry is not None:
+                metrics.on_cache_stats(cache.allocator.free_count,
+                                       cache.allocator.fragmentation())
+                metrics.on_queue_depths(
+                    {r: len(q) for r, q in sched.queues.items()})
 
     @staticmethod
     def _pack_flat(entries, width: int, null_slot: int):
@@ -572,13 +619,15 @@ class ElasticEngine:
         }
         if metas is not None:
             sampling = self._pack_sampling(metas, rows)
-            tokens, new_caches = self._sample_jit(params, caches,
-                                                  jnp.asarray(tok[None]),
-                                                  sampling)
+            with profiling.annotate("paged_sample_step"):
+                tokens, new_caches = self._sample_jit(params, caches,
+                                                      jnp.asarray(tok[None]),
+                                                      sampling)
             cache.update_pools(new_caches)
             return np.asarray(tokens)
-        logits, new_caches = self._mixed_jit(params, caches,
-                                             jnp.asarray(tok[None]))
+        with profiling.annotate("paged_mixed_step"):
+            logits, new_caches = self._mixed_jit(params, caches,
+                                                 jnp.asarray(tok[None]))
         cache.update_pools(new_caches)
         return logits
 
@@ -593,7 +642,7 @@ class ElasticEngine:
             raise CacheOOM(f"sequence {holders[0].req_id} alone exceeds "
                            "the pool")
         self._evict(Scheduler.pick_victim(holders), sched, cache, batcher,
-                    metrics)
+                    metrics, reason="prefill_pinned")
 
     # ------------------------------------------------ drain-batch (legacy)
 

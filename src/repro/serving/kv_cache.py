@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.obs import CAT_ALLOC, NULL_TRACER
 
 NULL_BLOCK = 0
 
@@ -56,6 +57,23 @@ class BlockAllocator:
             assert b in self._held, f"double free of block {b}"
             self._held.discard(b)
             self._free.append(b)
+
+    def fragmentation(self) -> float:
+        """Free-list fragmentation in [0, 1]: ``1 - largest contiguous run
+        of free block ids / free blocks``. 0 when every free block sits in
+        one id-contiguous run (or the list is empty); approaches 1 when the
+        free ids are scattered singletons. Id-contiguity is the proxy that
+        matters here: contiguous runs are what LIFO reuse hands back to the
+        next multi-block allocation as a dense table extent."""
+        if not self._free:
+            return 0.0
+        ids = sorted(self._free)
+        best = run = 1
+        for a, b in zip(ids, ids[1:]):
+            run = run + 1 if b == a + 1 else 1
+            if run > best:
+                best = run
+        return 1.0 - best / len(ids)
 
 
 @dataclasses.dataclass
@@ -95,6 +113,9 @@ class PagedKVCache:
         self.slots: List[Optional[SlotState]] = [None] * max_batch
         self._tables = np.full((max_batch, self.max_blocks_per_seq),
                                NULL_BLOCK, np.int32)
+        # observability: the engine points this at its Tracer; the default
+        # null tracer keeps every event site a single attribute check
+        self.tracer = NULL_TRACER
 
     # ------------------------------------------------------------- alloc
 
@@ -115,6 +136,12 @@ class PagedKVCache:
         self.slots[slot] = st
         self._tables[slot, :] = NULL_BLOCK
         self._tables[slot, : len(blocks)] = blocks
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "block_alloc", CAT_ALLOC,
+                args={"slot": slot, "blocks": len(blocks),
+                      "tokens": num_tokens,
+                      "free": self.allocator.free_count})
         return st
 
     def open_slot(self, slot: int) -> SlotState:
@@ -151,6 +178,11 @@ class PagedKVCache:
             fresh = self.allocator.alloc(need)
             self._tables[slot, len(st.blocks): len(st.blocks) + need] = fresh
             st.blocks.extend(fresh)
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "block_alloc", CAT_ALLOC,
+                    args={"slot": slot, "blocks": need, "tokens": n,
+                          "free": self.allocator.free_count})
         st.num_tokens += n
         return n
 
@@ -164,6 +196,11 @@ class PagedKVCache:
             (b,) = self.allocator.alloc(1)
             st.blocks.append(b)
             self._tables[slot, len(st.blocks) - 1] = b
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "block_alloc", CAT_ALLOC,
+                    args={"slot": slot, "blocks": 1, "tokens": 1,
+                          "free": self.allocator.free_count})
         st.num_tokens += 1
 
     def token_append_needs_block(self, slot: int) -> bool:
@@ -181,18 +218,30 @@ class PagedKVCache:
         assert st is not None, slot
         assert 0 <= num_tokens <= st.num_tokens, (num_tokens, st.num_tokens)
         keep = self.blocks_needed(num_tokens)
+        old_tokens = st.num_tokens
         released = len(st.blocks) - keep
         if released > 0:
             self.allocator.free(st.blocks[keep:])
             self._tables[slot, keep: len(st.blocks)] = NULL_BLOCK
             del st.blocks[keep:]
         st.num_tokens = num_tokens
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "block_truncate", CAT_ALLOC,
+                args={"slot": slot, "released": max(released, 0),
+                      "dropped_tokens": old_tokens - num_tokens,
+                      "free": self.allocator.free_count})
         return max(released, 0)
 
     def free_slot(self, slot: int) -> None:
         st = self.slots[slot]
         assert st is not None, slot
         self.allocator.free(st.blocks)
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "block_free", CAT_ALLOC,
+                args={"slot": slot, "blocks": len(st.blocks),
+                      "free": self.allocator.free_count})
         self.slots[slot] = None
         self._tables[slot, :] = NULL_BLOCK
 

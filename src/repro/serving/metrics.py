@@ -7,20 +7,39 @@ decoding rounds.
 
 Collected host-side by the engine loop (one sample per scheduler iteration)
 — cheap enough to stay on for production traffic.
+
+This module is the post-hoc per-run aggregator (``summary()`` means and
+percentiles). Live observability — structured trace events and exportable
+Prometheus/JSONL series — lives in ``repro.obs`` and is fed from the same
+callbacks when a ``tracer``/``registry`` is attached (see
+``ServingMetrics.__init__`` and ``docs/observability.md``).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs import (CAT_REQUEST, CAT_SPEC, NULL_TRACER, request_tid)
+
 
 def _pct(xs: List[float], q: float) -> float:
+    """Linear-interpolation quantile (numpy's default ``linear`` method).
+
+    The previous nearest-rank-with-rounding rule was biased at small N —
+    e.g. p90 of two samples returned the max outright and p50 of an even
+    list picked one middle element instead of their midpoint. Interpolating
+    between the floor/ceil order statistics at fractional rank
+    ``q * (N - 1)`` is exact for the N=1/N=2 edges and matches
+    ``np.percentile`` everywhere (pinned by tests/test_metrics.py)."""
     if not xs:
         return 0.0
     s = sorted(xs)
-    i = min(len(s) - 1, int(q * (len(s) - 1) + 0.5))
-    return s[i]
+    pos = q * (len(s) - 1)
+    lo = int(math.floor(pos))
+    hi = min(lo + 1, len(s) - 1)
+    return s[lo] + (s[hi] - s[lo]) * (pos - lo)
 
 
 def _mean(xs: List[float]) -> float:
@@ -52,9 +71,13 @@ class RequestTrace:
         is argmaxed from the prefill dispatch itself, so first_decode is
         ~0 by construction — it becomes meaningful once sampling moves off
         the host loop (async/batched samplers, ROADMAP). Components describe
-        the *successful* admission (``on_admit``/``on_prefill_end`` stop
-        updating once the first token exists, so a preempted-then-recomputed
-        request reports the attempt that actually delivered)."""
+        the attempt that actually DELIVERED: recompute semantics discard a
+        preemption victim's generated tokens, so ``on_preempt`` clears the
+        attempt timestamps (``admit_t``/``prefill_end_t``/``first_token_t``)
+        along with the token count and the re-admission records them fresh
+        — a preempted-then-recomputed request's TTFT spans submit to the
+        recomputed attempt's first token, never the discarded one
+        (pinned by tests/test_metrics.py)."""
         if (self.first_token_t is None or self.admit_t is None
                 or self.prefill_end_t is None):
             return None
@@ -64,10 +87,60 @@ class RequestTrace:
 
 
 class ServingMetrics:
-    """Aggregates per-request traces plus engine-level counters."""
+    """Aggregates per-request traces plus engine-level counters.
 
-    def __init__(self, clock=time.perf_counter):
+    Optionally fans the same lifecycle callbacks out to the observability
+    layer (``repro.obs``): ``tracer`` receives request-lifecycle instants
+    as they happen plus synthesized queue/prefill/decode duration spans at
+    finish (one Perfetto track per request), and ``registry`` keeps
+    exportable counters/gauges/histograms (tokens, TTFT parts, occupancy,
+    spec acceptance) alive for Prometheus scrapes and JSONL snapshots.
+    Both default to off and cost nothing when off; pass the engine's
+    ``tracer``/``registry`` (or construct your own) to turn them on. The
+    tracer should share this object's clock so spans line up."""
+
+    def __init__(self, clock=time.perf_counter, *, tracer=None,
+                 registry=None):
         self._clock = clock
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.registry = registry
+        if registry is not None:
+            self._m_tokens = registry.counter(
+                "repro_generated_tokens_total", "generated tokens delivered")
+            self._m_prefill = registry.counter(
+                "repro_prefill_tokens_total", "prompt tokens prefilled")
+            self._m_preempt = registry.counter(
+                "repro_preemptions_total", "sequences preempted for recompute")
+            self._m_finished = registry.counter(
+                "repro_requests_finished_total", "requests served to completion")
+            self._m_ttft = registry.histogram(
+                "repro_ttft_seconds", "submit -> first generated token")
+            self._m_ttft_part = registry.histogram(
+                "repro_ttft_part_seconds",
+                "TTFT decomposition (label part: queue/prefill/first_decode)")
+            self._m_occ = registry.gauge(
+                "repro_kv_occupancy", "paged-cache block occupancy [0, 1]")
+            self._m_frag = registry.gauge(
+                "repro_kv_free_fragmentation",
+                "1 - largest contiguous free run / free blocks")
+            self._m_free = registry.gauge(
+                "repro_kv_free_blocks", "free-list level")
+            self._m_disp = registry.histogram(
+                "repro_iteration_dispatch_seconds",
+                "per-iteration device dispatch+sync time")
+            self._m_host = registry.histogram(
+                "repro_iteration_host_seconds",
+                "per-iteration host scheduling/commit time")
+            self._m_draft = registry.counter(
+                "repro_spec_draft_tokens_total", "draft tokens proposed")
+            self._m_accept = registry.counter(
+                "repro_spec_accepted_tokens_total", "draft tokens accepted")
+            self._m_ewma = registry.gauge(
+                "repro_spec_accept_ewma",
+                "trailing speculative acceptance rate (0.1-weight EWMA)")
+            self._m_queue = registry.gauge(
+                "repro_queue_depth", "waiting requests (label row)")
+        self._accept_ewma: Optional[float] = None
         self.traces: Dict[int, RequestTrace] = {}
         self.decode_steps = 0
         self.prefill_tokens = 0
@@ -99,22 +172,34 @@ class ServingMetrics:
         if self._start is None:
             self._start = t
         self.traces[req_id] = RequestTrace(submit_t=t)
+        if self.tracer.enabled:
+            self.tracer.instant("submit", CAT_REQUEST,
+                                tid=request_tid(req_id))
 
     def on_admit(self, req_id: int) -> None:
         """Request seated in a batch slot (prefill may start)."""
         tr = self.traces[req_id]
         if tr.first_token_t is None:
             tr.admit_t = self.now()
+        if self.tracer.enabled:
+            self.tracer.instant("admit", CAT_REQUEST,
+                                tid=request_tid(req_id),
+                                args={"attempt": tr.preemptions + 1})
 
     def on_prefill_chunk(self, num_tokens: int) -> None:
         """A prefill chunk of ``num_tokens`` rode this iteration's budget."""
         self.prefill_tokens += num_tokens
+        if self.registry is not None:
+            self._m_prefill.inc(num_tokens)
 
     def on_prefill_end(self, req_id: int) -> None:
         """The request's final prompt chunk went through the forward."""
         tr = self.traces[req_id]
         if tr.first_token_t is None:
             tr.prefill_end_t = self.now()
+        if self.tracer.enabled:
+            self.tracer.instant("prefill_end", CAT_REQUEST,
+                                tid=request_tid(req_id))
 
     def on_first_token(self, req_id: int, prefill_tokens: int = 0) -> None:
         """First generated token sampled. ``prefill_tokens``: prompt tokens
@@ -128,12 +213,28 @@ class ServingMetrics:
             if tr.prefill_end_t is None:
                 tr.prefill_end_t = t
             tr.first_token_t = t
+            if self.tracer.enabled:
+                self.tracer.instant("first_token", CAT_REQUEST,
+                                    tid=request_tid(req_id))
+            if self.registry is not None:
+                self._m_ttft.observe(tr.ttft)
+                parts = tr.ttft_parts
+                if parts is not None:
+                    for part, v in zip(("queue", "prefill", "first_decode"),
+                                       parts):
+                        self._m_ttft_part.labels(part=part).observe(v)
         tr.new_tokens += 1
         self.prefill_tokens += prefill_tokens
+        if self.registry is not None:
+            self._m_tokens.inc()
+            if prefill_tokens:
+                self._m_prefill.inc(prefill_tokens)
 
     def on_decode_step(self, new_tokens: int, occupancy: float) -> None:
         self.decode_steps += 1
         self.occupancy_samples.append(occupancy)
+        if self.registry is not None:
+            self._m_occ.set(occupancy)
 
     def on_mixed_step(self, decode_tokens: int, prefill_tokens: int,
                       occupancy: float) -> None:
@@ -143,6 +244,24 @@ class ServingMetrics:
         if decode_tokens:
             self.decode_steps += 1
         self.occupancy_samples.append(occupancy)
+        if self.tracer.enabled:
+            self.tracer.counter("kv_occupancy", occupancy)
+        if self.registry is not None:
+            self._m_occ.set(occupancy)
+
+    def on_cache_stats(self, free_blocks: int, fragmentation: float) -> None:
+        """Free-list level + fragmentation gauges (engine calls this per
+        iteration only when a registry is attached — computing fragmentation
+        walks the free list)."""
+        if self.registry is not None:
+            self._m_free.set(free_blocks)
+            self._m_frag.set(fragmentation)
+
+    def on_queue_depths(self, depths: Dict[int, int]) -> None:
+        """Per-budget-row waiting-queue depths (gauge labeled by row)."""
+        if self.registry is not None:
+            for row, depth in depths.items():
+                self._m_queue.labels(row=row).set(depth)
 
     def on_spec_round(self, draft_tokens: int, verify_tokens: int,
                       accepted_tokens: int, drafting_seqs: int = 0) -> None:
@@ -157,6 +276,21 @@ class ServingMetrics:
         self.draft_tokens += draft_tokens
         self.accepted_draft_tokens += accepted_tokens
         self.drafting_seq_rounds += drafting_seqs
+        if draft_tokens:
+            rate = accepted_tokens / draft_tokens
+            self._accept_ewma = (rate if self._accept_ewma is None
+                                 else 0.9 * self._accept_ewma + 0.1 * rate)
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "spec_round", CAT_SPEC,
+                args={"draft": draft_tokens, "verify": verify_tokens,
+                      "accepted": accepted_tokens,
+                      "drafting_seqs": drafting_seqs})
+        if self.registry is not None:
+            self._m_draft.inc(draft_tokens)
+            self._m_accept.inc(accepted_tokens)
+            if self._accept_ewma is not None:
+                self._m_ewma.set(self._accept_ewma)
 
     def on_iteration_timing(self, dispatch_s: float, host_s: float) -> None:
         """One iteration's device/host wall-time split. ``dispatch_s``:
@@ -165,21 +299,64 @@ class ServingMetrics:
         host — scheduling, cache bookkeeping, commits, and (on the
         host-sampling oracle path) the per-row python sampling loop."""
         self.timing_log.append((dispatch_s, max(host_s, 0.0)))
+        if self.registry is not None:
+            self._m_disp.observe(dispatch_s)
+            self._m_host.observe(max(host_s, 0.0))
 
     def on_token(self, req_id: int) -> None:
         self.traces[req_id].new_tokens += 1
+        if self.registry is not None:
+            self._m_tokens.inc()
 
     def on_preempt(self, req_id: int) -> None:
         self.preemptions += 1
         tr = self.traces[req_id]
         tr.preemptions += 1
         # recompute semantics discard the victim's generated tokens; only
-        # delivered tokens may count toward throughput
+        # delivered tokens may count toward throughput — and only the
+        # delivering attempt's timeline may count toward TTFT, so the
+        # attempt timestamps reset with the tokens (the re-admission
+        # records fresh ones; ``submit_t`` and the preemption counter are
+        # the only survivors of an attempt)
         tr.new_tokens = 0
+        tr.admit_t = None
+        tr.prefill_end_t = None
+        tr.first_token_t = None
+        if self.tracer.enabled:
+            self.tracer.instant("preempt", CAT_REQUEST,
+                                tid=request_tid(req_id),
+                                args={"preemptions": tr.preemptions})
+        if self.registry is not None:
+            self._m_preempt.inc()
 
     def on_finish(self, req_id: int) -> None:
-        self.traces[req_id].finish_t = self.now()
-        self._end = self.now()
+        tr = self.traces[req_id]
+        tr.finish_t = self.now()
+        self._end = tr.finish_t
+        if self.registry is not None:
+            self._m_finished.inc()
+        if self.tracer.enabled:
+            self._trace_request_spans(req_id, tr)
+
+    def _trace_request_spans(self, req_id: int, tr: RequestTrace) -> None:
+        """Synthesize the finished request's duration spans from its
+        ``RequestTrace`` timestamps — one Perfetto track per request with
+        ``request`` covering submit -> finish and ``queue``/``prefill``/
+        ``decode`` sub-spans for the delivering attempt."""
+        tid = request_tid(req_id)
+        t = self.tracer
+        t.instant("finish", CAT_REQUEST, tid=tid)
+        t.complete("request", CAT_REQUEST, tr.submit_t, tr.finish_t, tid=tid,
+                   args={"req": req_id, "new_tokens": tr.new_tokens,
+                         "preemptions": tr.preemptions})
+        if tr.admit_t is not None:
+            t.complete("queue", CAT_REQUEST, tr.submit_t, tr.admit_t, tid=tid)
+        if tr.admit_t is not None and tr.prefill_end_t is not None:
+            t.complete("prefill", CAT_REQUEST, tr.admit_t, tr.prefill_end_t,
+                       tid=tid)
+        if tr.first_token_t is not None:
+            t.complete("decode", CAT_REQUEST, tr.first_token_t, tr.finish_t,
+                       tid=tid)
 
     # ----------------------------------------------------------- summary
 
@@ -188,7 +365,9 @@ class ServingMetrics:
         parts = [t.ttft_parts for t in self.traces.values()
                  if t.ttft_parts is not None]
         gen = sum(t.new_tokens for t in self.traces.values())
-        wall = ((self._end or self.now()) - (self._start or self.now())) or 1e-9
+        end = self._end if self._end is not None else self.now()
+        start = self._start if self._start is not None else end
+        wall = (end - start) or 1e-9
         occ = self.occupancy_samples
         return {
             "requests": len(self.traces),

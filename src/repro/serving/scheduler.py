@@ -46,6 +46,7 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import CAT_SCHED, NULL_TRACER
 from repro.serving.sampling import SamplerState, SamplingParams
 
 
@@ -134,8 +135,9 @@ class BudgetRouter:
 
 
 class Scheduler:
-    def __init__(self, router: BudgetRouter):
+    def __init__(self, router: BudgetRouter, *, tracer=None):
         self.router = router
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.queues: Dict[int, Deque[Sequence]] = {}
         self._next_id = 0
         self._order: Deque[int] = deque()   # row service order (FIFO arrival)
@@ -146,12 +148,22 @@ class Scheduler:
         seq.sampler = SamplerState(request.sampling, seq.req_id)
         self._next_id += 1
         self.queues.setdefault(row, deque()).append(seq)
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "route", CAT_SCHED,
+                args={"req": seq.req_id, "budget": request.budget,
+                      "row": row, "reason": "largest_feasible_row"})
         return seq
 
     def requeue_front(self, seq: Sequence) -> None:
         """Preempted sequence: recompute from scratch, ahead of its row queue."""
         seq.reset_for_recompute()
         self.queues.setdefault(seq.row, deque()).appendleft(seq)
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "requeue", CAT_SCHED,
+                args={"req": seq.req_id, "row": seq.row,
+                      "reason": "preempt_recompute"})
 
     def pending_rows(self) -> List[int]:
         return [r for r, q in self.queues.items() if q]

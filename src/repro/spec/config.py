@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,12 +118,17 @@ class SpecConfig:
             k = cap
         return max(0, min(k, seq.remaining - 1))
 
-    def observe_round(self, seq, k: int, accepted: int) -> None:
+    def observe_round(self, seq, k: int, accepted: int) -> Optional[dict]:
         """Feed one drafting round's outcome (``accepted`` of ``k`` drafts
         survived) into the sequence's adaptive-k controller. No-op unless
-        ``adaptive_k``; rounds that drafted nothing carry no signal."""
+        ``adaptive_k``; rounds that drafted nothing carry no signal.
+
+        Returns a decision record (``req``/``k``/``accepted``/``ewma``/
+        ``action``/``new_k``/``reason``) when the controller ran, so the
+        decoder can trace every adaptive-k move with its reason; ``None``
+        when the round carried no signal."""
         if not self.adaptive_k or k <= 0:
-            return
+            return None
         rate = accepted / k
         ewma = seq.spec_accept_ewma
         seq.spec_accept_ewma = (rate if ewma is None
@@ -131,8 +137,20 @@ class SpecConfig:
         cur = seq.spec_k if seq.spec_k is not None else k
         if seq.spec_accept_ewma >= self.k_grow:
             cur += 1
+            action = "grow"
+            reason = f"ewma {seq.spec_accept_ewma:.3f} >= k_grow {self.k_grow}"
         elif seq.spec_accept_ewma < self.k_shrink:
             cur -= 1
+            action = "shrink"
+            reason = (f"ewma {seq.spec_accept_ewma:.3f} < "
+                      f"k_shrink {self.k_shrink}")
+        else:
+            action = "hold"
+            reason = (f"ewma {seq.spec_accept_ewma:.3f} in "
+                      f"[{self.k_shrink}, {self.k_grow})")
         seq.spec_k = max(0, min(cur, self._spec_len_cap(seq)))
         if seq.spec_k > 0:
             seq.spec_idle_rounds = 0
+        return {"req": seq.req_id, "k": k, "accepted": accepted,
+                "ewma": seq.spec_accept_ewma, "action": action,
+                "new_k": seq.spec_k, "reason": reason}

@@ -74,6 +74,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import CAT_SCHED, CAT_SPEC, profiling
 from repro.serving.batcher import ContinuousBatcher
 from repro.serving.kv_cache import CacheOOM, PagedKVCache
 from repro.serving.metrics import ServingMetrics
@@ -165,12 +166,14 @@ class SpecDecoder:
         self.metrics = metrics
         self.results = results
         self.max_batch = engine.max_batch
+        self.tracer = engine.tracer
         self.target_params = engine._realize(row)
         self.draft_params = engine._realize(draft_row)
         # 2x slots, one allocator: seat s -> target slot s, draft slot B + s
         self.cache = PagedKVCache(
             self.cfg, max_batch=2 * engine.max_batch, max_len=engine.max_len,
             block_size=engine.block_size, num_blocks=engine.num_blocks)
+        self.cache.tracer = self.tracer
         self.batcher = ContinuousBatcher(engine.max_batch)
         self._round_tables = None    # device block tables, valid per round
         self._disp_s = 0.0           # per-round device-dispatch seconds
@@ -211,20 +214,26 @@ class SpecDecoder:
                 out.append(seq)
         return out
 
-    def _evict(self, victim: Sequence) -> int:
+    def _evict(self, victim: Sequence, *, reason: str = "cache_pressure") -> int:
         """Preempt one sequence: free both slots, drop its (implicitly
         in-flight) draft state, re-queue at the row front for recompute."""
         seat = self.batcher.slot_of(victim)
+        vstate = victim.state
         self.batcher.leave(seat)
         self._free_pair(seat)
         self.sched.requeue_front(victim)
         self.metrics.on_preempt(victim.req_id)
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "preempt", CAT_SCHED,
+                args={"req": victim.req_id, "slot": seat, "reason": reason,
+                      "policy": "youngest_first", "state": vstate})
         return seat
 
     # -------------------------------------------------------------- loop
 
     def serve(self) -> None:
-        eng, sched = self.engine, self.sched
+        eng, sched, tr = self.engine, self.sched, self.tracer
         while True:
             it0 = self.metrics.now()
             self._disp_s = 0.0
@@ -234,6 +243,11 @@ class SpecDecoder:
                     break
                 seq = sched.pop(self.row)
                 self.metrics.on_admit(seq.req_id)
+                if tr.enabled:
+                    tr.instant("admit", CAT_SCHED,
+                               args={"req": seq.req_id, "row": self.row,
+                                     "slot": seat, "reason": "slot_free",
+                                     "attempt": seq.admissions})
                 if seq.request.max_new_tokens <= 0:
                     eng._finish(seq, self.metrics, self.results)
                     continue
@@ -253,6 +267,12 @@ class SpecDecoder:
                     continue                     # everyone was preempted
                 self._unstick()
                 continue
+            plan_end = self.metrics.now()
+            if tr.enabled:
+                tr.complete("plan", CAT_SPEC, it0, plan_end,
+                            args={"plans": len(plans),
+                                  "chunks": len(chunks),
+                                  "draft_tokens": sum(p.k for p in plans)})
 
             # every block the round touches was reserved during planning,
             # so one table snapshot serves all k+1 dispatches (host-side:
@@ -262,13 +282,29 @@ class SpecDecoder:
                 self.cache.active_max_blocks(), null_rows=1)
             if eng.device_sampling:
                 self._draft_phase_device(plans)
+                draft_end = self.metrics.now()
                 self._verify_and_commit_device(plans, chunks)
             else:
                 self._draft_phase(plans)
+                draft_end = self.metrics.now()
                 self._verify_and_commit(plans, chunks)
             self._round_tables = None
+            it1 = self.metrics.now()
+            if tr.enabled:
+                if draft_end > plan_end:
+                    tr.complete("draft", CAT_SPEC, plan_end, draft_end,
+                                args={"drafters": sum(1 for p in plans
+                                                      if p.k > 0)})
+                tr.complete("verify", CAT_SPEC, draft_end, it1,
+                            args={"plans": len(plans), "chunks": len(chunks)})
             self.metrics.on_iteration_timing(
-                self._disp_s, self.metrics.now() - it0 - self._disp_s)
+                self._disp_s, it1 - it0 - self._disp_s)
+            if eng.registry is not None:
+                self.metrics.on_cache_stats(
+                    self.cache.allocator.free_count,
+                    self.cache.allocator.fragmentation())
+                self.metrics.on_queue_depths(
+                    {r: len(q) for r, q in sched.queues.items()})
 
     # ----------------------------------------------------------- planning
 
@@ -387,7 +423,7 @@ class SpecDecoder:
         if self.batcher.num_active == 1:
             raise CacheOOM(f"sequence {holders[0].req_id} alone exceeds "
                            "the pool")
-        self._evict(Scheduler.pick_victim(holders))
+        self._evict(Scheduler.pick_victim(holders), reason="round_stalled")
 
     # ------------------------------------------------------------ forward
 
@@ -410,8 +446,11 @@ class SpecDecoder:
             "segments": self.cache.pools,
         }
         t0 = self.metrics.now()
-        logits, new_caches = fn(params, caches, jnp.asarray(tok[None]))
-        jax.block_until_ready(logits)
+        name = ("paged_verify_step" if fn is self.engine._verify_jit
+                else "paged_mixed_step")
+        with profiling.annotate(name):
+            logits, new_caches = fn(params, caches, jnp.asarray(tok[None]))
+            jax.block_until_ready(logits)
         self._disp_s += self.metrics.now() - t0
         self.cache.update_pools(new_caches)
         return logits[0]            # device array: callers argmax on device
@@ -494,9 +533,12 @@ class SpecDecoder:
                 eng._pack_sample_ids(sample_ids, width)),
         }
         t0 = self.metrics.now()
-        out = jit_fn(params, caches, jnp.asarray(tok[None]), *extra)
-        self.cache.update_pools(out[-1])
-        jax.block_until_ready(out[:-1])
+        name = ("paged_verify_step" if jit_fn is eng._verify_accept_jit
+                else "paged_sample_step")
+        with profiling.annotate(name):
+            out = jit_fn(params, caches, jnp.asarray(tok[None]), *extra)
+            self.cache.update_pools(out[-1])
+            jax.block_until_ready(out[:-1])
         self._disp_s += self.metrics.now() - t0
         return out[:-1]
 
@@ -667,7 +709,9 @@ class SpecDecoder:
             m = int(m_h[pi])
             commit = [int(x) for x in commit_h[pi, : m + 1]]
             commit = commit[: p.seq.remaining]
-            self.spec.observe_round(p.seq, p.k, m)
+            decision = self.spec.observe_round(p.seq, p.k, m)
+            if decision is not None and self.tracer.enabled:
+                self.tracer.instant("adaptive_k", CAT_SCHED, args=decision)
             drafted += p.k
             verified += p.k + 1
             accepted_total += m
@@ -761,7 +805,9 @@ class SpecDecoder:
                 commit = [sample_token(p.seq, logits[flat])]
             commit = commit[: p.seq.remaining]
             flat += run
-            self.spec.observe_round(p.seq, p.k, m)
+            decision = self.spec.observe_round(p.seq, p.k, m)
+            if decision is not None and self.tracer.enabled:
+                self.tracer.instant("adaptive_k", CAT_SCHED, args=decision)
             drafted += p.k
             verified += run
             accepted_total += m

@@ -1,0 +1,157 @@
+"""ServingMetrics unit suite: percentile math and the per-request trace
+lifecycle — in particular the preempt -> recompute audit, which pins that a
+preempted-then-recomputed request reports the DELIVERING attempt's TTFT
+decomposition (recompute discards the first attempt's tokens, so its
+timestamps must not survive into the summary)."""
+import numpy as np
+import pytest
+
+from repro.obs import MetricsRegistry
+from repro.serving.metrics import RequestTrace, ServingMetrics, _pct
+
+
+# ------------------------------------------------------------ percentiles
+
+class TestPct:
+    def test_empty(self):
+        assert _pct([], 0.5) == 0.0
+
+    @pytest.mark.parametrize("q", [0.0, 0.5, 0.9, 0.99, 1.0])
+    def test_single_element(self, q):
+        assert _pct([42.0], q) == 42.0
+
+    @pytest.mark.parametrize("q,expect", [
+        (0.5, 15.0),     # midpoint, not either element
+        (0.9, 19.0),     # 10 + 0.9 * (20 - 10)
+        (0.99, 19.9),
+    ])
+    def test_two_elements_interpolate(self, q, expect):
+        assert _pct([20.0, 10.0], q) == pytest.approx(expect)
+
+    @pytest.mark.parametrize("n", [3, 4, 5, 10, 11])
+    @pytest.mark.parametrize("q", [0.5, 0.9, 0.99])
+    def test_matches_numpy_linear(self, n, q):
+        rng = np.random.default_rng(n * 100 + int(q * 100))
+        xs = rng.normal(size=n).tolist()
+        assert _pct(xs, q) == pytest.approx(
+            float(np.percentile(xs, q * 100)))
+
+    def test_even_list_median_is_midpoint(self):
+        # the old nearest-rank rule returned one middle element here
+        assert _pct([1.0, 2.0, 3.0, 4.0], 0.5) == 2.5
+
+    def test_unsorted_input(self):
+        assert _pct([3.0, 1.0, 2.0], 0.5) == 2.0
+
+
+# -------------------------------------------------------- request traces
+
+class FakeClock:
+    """Deterministic clock: each ``()`` call returns the next scripted
+    instant (asserts if the script runs dry)."""
+
+    def __init__(self, times):
+        self._it = iter(times)
+
+    def __call__(self):
+        return next(self._it)
+
+
+def test_ttft_parts_simple():
+    m = ServingMetrics(clock=FakeClock([0.0, 1.0, 3.0, 6.0, 7.0]))
+    m.on_submit(0)          # t=0
+    m.on_admit(0)           # t=1
+    m.on_prefill_end(0)     # t=3
+    m.on_first_token(0)     # t=6
+    m.on_finish(0)          # t=7
+    tr = m.traces[0]
+    assert tr.ttft == 6.0
+    assert tr.ttft_parts == (1.0, 2.0, 3.0)
+
+
+def test_preempt_then_recompute_reports_delivering_attempt():
+    """A request admitted, prefilled, and one token in gets preempted; the
+    recomputed attempt delivers. TTFT and its decomposition must describe
+    attempt 2 (queue spans submit -> RE-admission), never the discarded
+    first attempt's timestamps."""
+    m = ServingMetrics(clock=FakeClock([
+        0.0,    # submit
+        1.0,    # admit (attempt 1)
+        2.0,    # prefill_end (attempt 1)
+        3.0,    # first_token (attempt 1) -- later discarded
+        10.0,   # admit (attempt 2)
+        12.0,   # prefill_end (attempt 2)
+        15.0,   # first_token (attempt 2) -- the delivering one
+        16.0,   # finish
+    ]))
+    m.on_submit(0)
+    m.on_admit(0)
+    m.on_prefill_end(0)
+    m.on_first_token(0)
+    m.on_token(0)
+    m.on_preempt(0)          # recompute: tokens + attempt timestamps drop
+    tr = m.traces[0]
+    assert tr.new_tokens == 0
+    assert tr.admit_t is None and tr.prefill_end_t is None
+    assert tr.first_token_t is None and tr.ttft is None
+
+    m.on_admit(0)
+    m.on_prefill_end(0)
+    m.on_first_token(0)
+    m.on_token(0)
+    m.on_finish(0)
+    assert tr.preemptions == 1
+    assert tr.new_tokens == 2
+    assert tr.ttft == 15.0                      # submit -> delivering token
+    assert tr.ttft_parts == (10.0, 2.0, 3.0)    # attempt-2 decomposition
+    s = m.summary()
+    assert s["preemptions"] == 1
+    assert s["ttft_mean_s"] == 15.0
+    assert s["ttft_queue_mean_s"] == 10.0
+    assert s["ttft_prefill_mean_s"] == 2.0
+    assert s["ttft_first_decode_mean_s"] == 3.0
+
+
+def test_first_token_does_not_restamp_on_later_admits():
+    """Once a request has delivered its first token, later on_admit /
+    on_prefill_end calls (continuous-batching noise) must not move the
+    recorded attempt timestamps."""
+    m = ServingMetrics(clock=FakeClock([0.0, 1.0, 2.0, 3.0, 99.0]))
+    m.on_submit(0)
+    m.on_admit(0)
+    m.on_prefill_end(0)
+    m.on_first_token(0)
+    m.on_admit(0)            # t=99 must NOT land anywhere
+    tr = m.traces[0]
+    assert tr.admit_t == 1.0 and tr.ttft_parts == (1.0, 1.0, 1.0)
+
+
+def test_requesttrace_parts_none_until_complete():
+    tr = RequestTrace(submit_t=0.0)
+    assert tr.ttft is None and tr.ttft_parts is None
+    tr.admit_t = 1.0
+    assert tr.ttft_parts is None
+
+
+def test_registry_sees_preemption_and_delivered_tokens():
+    reg = MetricsRegistry()
+    m = ServingMetrics(clock=FakeClock([float(i) for i in range(10)]),
+                       registry=reg)
+    m.on_submit(0)
+    m.on_admit(0)
+    m.on_prefill_end(0)
+    m.on_first_token(0)
+    m.on_preempt(0)
+    m.on_admit(0)
+    m.on_prefill_end(0)
+    m.on_first_token(0)
+    m.on_finish(0)
+    snap = reg.snapshot()
+    assert snap["repro_preemptions_total"] == 1
+    assert snap["repro_requests_finished_total"] == 1
+    # both attempts' first tokens count as generated work performed...
+    assert snap["repro_generated_tokens_total"] == 2
+    # ...but the trace only credits the delivered attempt
+    assert m.traces[0].new_tokens == 1
+    # TTFT histogram observed once per delivering attempt
+    assert snap["repro_ttft_seconds_count"] == 2

@@ -1,0 +1,383 @@
+"""Observability suite: tracer unit tests (event rendering, span nesting,
+schema validation, the disabled-path zero-allocation discipline), metrics
+registry tests (Prometheus text exposition, JSONL snapshots, histogram
+quantiles), and engine integration — a traced serve must produce a
+schema-valid Chrome trace containing request-lifecycle spans, per-iteration
+plan/dispatch/commit spans, and scheduler decision events with reasons.
+
+Run under ``REPRO_TRACE=1`` the whole serving suite exercises the enabled
+tracer through every engine path (the CI obs matrix); the default run pins
+the disabled fast path.
+"""
+import json
+import tracemalloc
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.obs import (CAT_ITER, CAT_REQUEST, CAT_SCHED, MetricsRegistry,
+                       NULL_TRACER, NullTracer, Tracer, make_tracer,
+                       request_tid, validate_chrome_trace)
+from repro.obs.tracer import ENGINE_TID
+from repro.serving import ElasticEngine, Request
+
+
+# ---------------------------------------------------------------- tracer
+
+def test_instant_and_complete_render():
+    tr = Tracer(clock=iter([0.0, 1.0, 2.5]).__next__)   # t0 = 0.0
+    tr.instant("hello", "cat", args={"x": 1})           # ts 1.0s
+    tr.complete("span", "cat", 1.5, 2.0, tid=7)
+    evs = [e for e in tr.chrome_events() if e["ph"] != "M"]
+    inst, comp = evs
+    assert inst == {"name": "hello", "ph": "i", "ts": 1e6, "pid": 1,
+                    "tid": ENGINE_TID, "cat": "cat", "args": {"x": 1}}
+    assert comp["ph"] == "X" and comp["ts"] == 1.5e6
+    assert comp["dur"] == 0.5e6 and comp["tid"] == 7
+
+
+def test_complete_clamps_negative_duration():
+    tr = Tracer(clock=lambda: 0.0)
+    tr.complete("s", "c", 2.0, 1.0)
+    (ev,) = [e for e in tr.chrome_events() if e["ph"] == "X"]
+    assert ev["dur"] == 0.0
+
+
+def test_counter_event():
+    tr = Tracer(clock=iter([0.0, 1.0]).__next__)
+    tr.counter("kv_occupancy", 0.75)
+    (ev,) = [e for e in tr.chrome_events() if e["ph"] == "C"]
+    assert ev["args"] == {"value": 0.75}
+
+
+def test_span_nesting_and_ordering():
+    tr = Tracer()
+    with tr.span("outer", "cat"):
+        with tr.span("inner", "cat"):
+            tr.instant("tick")
+    phases = [(e[0], e[1]) for e in tr._events]
+    assert phases == [("B", "outer"), ("B", "inner"), ("i", "tick"),
+                      ("E", "inner"), ("E", "outer")]
+    ts = [e[3] for e in tr._events]
+    assert ts == sorted(ts)                      # monotone event times
+    assert not validate_chrome_trace(tr.to_chrome())
+
+
+def test_mismatched_end_asserts():
+    tr = Tracer()
+    tr.begin("a")
+    with pytest.raises(AssertionError):
+        tr.end("b")
+
+
+def test_span_stacks_are_per_tid():
+    tr = Tracer()
+    tr.begin("a", tid=1)
+    tr.begin("b", tid=2)
+    tr.end("b", tid=2)
+    tr.end("a", tid=1)
+    assert not validate_chrome_trace(tr.to_chrome())
+
+
+def test_thread_name_metadata():
+    tr = Tracer()
+    tr.instant("x")                              # engine track
+    tr.instant("y", tid=request_tid(3))
+    meta = {e["tid"]: e["args"]["name"]
+            for e in tr.chrome_events() if e["ph"] == "M"}
+    assert meta[ENGINE_TID] == "engine"
+    assert meta[request_tid(3)] == "req 3"
+
+
+def test_export_roundtrip(tmp_path):
+    tr = Tracer()
+    tr.instant("x", "c", args={"n": 2})
+    chrome, jsonl = tmp_path / "t.json", tmp_path / "t.jsonl"
+    tr.export_chrome(chrome)
+    tr.export_jsonl(jsonl)
+    obj = json.loads(chrome.read_text())
+    assert not validate_chrome_trace(obj)
+    lines = [json.loads(l) for l in jsonl.read_text().splitlines()]
+    assert obj["traceEvents"] == lines
+
+
+# ----------------------------------------------------- schema validation
+
+def test_validator_accepts_minimal_trace():
+    ok = {"traceEvents": [
+        {"name": "a", "ph": "i", "ts": 0, "pid": 1, "tid": 0},
+        {"name": "b", "ph": "X", "ts": 1, "dur": 2, "pid": 1, "tid": 0},
+    ]}
+    assert validate_chrome_trace(ok) == []
+
+
+@pytest.mark.parametrize("bad,needle", [
+    ({"traceEvents": [{"name": "a", "ph": "Z", "ts": 0, "pid": 1,
+                       "tid": 0}]}, "bad phase"),
+    ({"traceEvents": [{"ph": "i", "ts": 0, "pid": 1, "tid": 0}]},
+     "missing 'name'"),
+    ({"traceEvents": [{"name": "a", "ph": "i", "ts": -1, "pid": 1,
+                       "tid": 0}]}, "bad ts"),
+    ({"traceEvents": [{"name": "a", "ph": "X", "ts": 0, "pid": 1,
+                       "tid": 0}]}, "dur"),
+    ({"traceEvents": [{"name": "a", "ph": "E", "ts": 0, "pid": 1,
+                       "tid": 0}]}, "E without open B"),
+    ({"traceEvents": [{"name": "a", "ph": "B", "ts": 0, "pid": 1,
+                       "tid": 0}]}, "unclosed B"),
+    ({"events": []}, "traceEvents"),
+])
+def test_validator_rejects(bad, needle):
+    problems = validate_chrome_trace(bad)
+    assert problems and any(needle in p for p in problems), problems
+
+
+# --------------------------------------------------- disabled fast path
+
+def test_null_tracer_is_inert():
+    tr = NULL_TRACER
+    assert isinstance(tr, NullTracer) and not tr.enabled
+    tr.instant("x")
+    tr.complete("y", "c", 0.0, 1.0)
+    tr.counter("z", 1.0)
+    with tr.span("s"):
+        pass
+    assert len(tr) == 0 and tr.chrome_events() == []
+    assert tr.to_chrome() == {"traceEvents": [], "displayTimeUnit": "ms"}
+
+
+def test_disabled_guarded_path_allocates_nothing():
+    """The hot-loop discipline: call sites guard argument construction
+    with ``if tracer.enabled:``, so the disabled path is one attribute
+    check — no event tuples, no args dicts, no growth anywhere."""
+    tr = NULL_TRACER
+
+    def guarded_loop(n):
+        for i in range(n):
+            if tr.enabled:
+                tr.instant("iter", "cat", args={"i": i})
+
+    guarded_loop(100)                            # warm caches
+    tracemalloc.start()
+    guarded_loop(10_000)
+    current, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert peak < 1024, f"disabled tracing allocated {peak} bytes"
+
+
+def test_make_tracer_env_knob(monkeypatch):
+    monkeypatch.delenv("REPRO_TRACE", raising=False)
+    assert make_tracer() is NULL_TRACER
+    monkeypatch.setenv("REPRO_TRACE", "0")
+    assert make_tracer() is NULL_TRACER
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    assert isinstance(make_tracer(), Tracer)
+    assert isinstance(make_tracer(True), Tracer)   # explicit beats env
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    assert make_tracer(False) is NULL_TRACER
+
+
+# --------------------------------------------------------------- registry
+
+def test_counter_gauge_histogram():
+    reg = MetricsRegistry()
+    reg.counter("c", "help").inc()
+    reg.counter("c").inc(2)
+    reg.gauge("g").set(3.5)
+    reg.gauge("g").dec(0.5)
+    h = reg.histogram("h", buckets=(1.0, 2.0))
+    for v in (0.5, 1.5, 1.5, 10.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["c"] == 3.0
+    assert snap["g"] == 3.0
+    assert snap["h_count"] == 4 and snap["h_sum"] == 13.5
+    with pytest.raises(AssertionError):
+        reg.counter("c").inc(-1)
+
+
+def test_histogram_quantile_interpolates():
+    reg = MetricsRegistry()
+    h = reg.histogram("h", buckets=(1.0, 2.0, 4.0)).labels()
+    assert h.quantile(0.5) == 0.0                # empty
+    for v in (0.5, 1.5, 3.0, 3.5):
+        h.observe(v)
+    assert 0.0 < h.quantile(0.25) <= 1.0
+    assert 2.0 < h.quantile(0.9) <= 4.0
+    h.observe(100.0)                             # +Inf bucket
+    assert h.quantile(0.99) == 4.0               # clamps to top bound
+
+
+def test_labels_children_are_distinct():
+    reg = MetricsRegistry()
+    fam = reg.counter("tokens", "t")
+    fam.labels(row=0).inc(5)
+    fam.labels(row=1).inc(7)
+    assert fam.labels(row=0).value == 5
+    snap = reg.snapshot()
+    assert snap['tokens{row="0"}'] == 5 and snap['tokens{row="1"}'] == 7
+
+
+def test_prometheus_text_format():
+    reg = MetricsRegistry()
+    reg.counter("req_total", "requests served").inc(3)
+    h = reg.histogram("lat", "latency", buckets=(0.1, 1.0))
+    h.labels(part="queue").observe(0.05)
+    h.labels(part="queue").observe(0.5)
+    text = reg.prometheus_text()
+    assert "# HELP req_total requests served" in text
+    assert "# TYPE req_total counter" in text
+    assert "req_total 3" in text
+    assert "# TYPE lat histogram" in text
+    # cumulative buckets + sum/count with the le label appended
+    assert 'lat_bucket{part="queue",le="0.1"} 1' in text
+    assert 'lat_bucket{part="queue",le="1"} 2' in text
+    assert 'lat_bucket{part="queue",le="+Inf"} 2' in text
+    assert 'lat_sum{part="queue"} 0.55' in text
+    assert 'lat_count{part="queue"} 2' in text
+    assert text.endswith("\n")
+
+
+def test_snapshot_jsonl_appends(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("c").inc()
+    path = tmp_path / "snaps.jsonl"
+    reg.snapshot_jsonl(path, clock=lambda: 10.0)
+    reg.counter("c").inc()
+    reg.snapshot_jsonl(path, clock=lambda: 20.0)
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert [l["time"] for l in lines] == [10.0, 20.0]
+    assert [l["c"] for l in lines] == [1.0, 2.0]
+
+
+def test_write_prometheus(tmp_path):
+    reg = MetricsRegistry()
+    reg.gauge("g", "a gauge").set(1.25)
+    path = tmp_path / "metrics.prom"
+    reg.write_prometheus(path)
+    assert "g 1.25" in path.read_text()
+
+
+# ----------------------------------------------------- engine integration
+
+@pytest.fixture(scope="module")
+def smoke_state():
+    from repro.data import make_source
+    from repro.launch.train import build_flexrank_state
+    from repro.models import common as cm
+    from repro.models import transformer as tfm
+    cfg = get_config("gpt2-small", smoke=True)
+    source = make_source(cfg.vocab_size, 64, 4, seed=0)
+    dense = cm.instantiate(tfm.model_spec(cfg), jax.random.PRNGKey(0))
+    params_fact, table, infos = build_flexrank_state(cfg, dense, source)
+    return cfg, params_fact, table, infos
+
+
+def _mk_engine(state, **kw):
+    cfg, params_fact, table, infos = state
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("block_size", 8)
+    return ElasticEngine(cfg, params_fact, table, infos, **kw)
+
+
+def _requests(cfg, spec, seed=7):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, pl).astype(np.int32),
+                    max_new_tokens=mn, budget=b) for pl, mn, b in spec]
+
+
+def _names(evs, cat):
+    return {e["name"] for e in evs if e.get("cat") == cat}
+
+
+def test_engine_default_tracer_is_disabled(smoke_state, monkeypatch):
+    monkeypatch.delenv("REPRO_TRACE", raising=False)
+    eng = _mk_engine(smoke_state)
+    assert eng.tracer is NULL_TRACER and eng.registry is None
+
+
+def test_traced_serve_produces_valid_trace(smoke_state):
+    cfg = smoke_state[0]
+    tracer, registry = make_tracer(True), MetricsRegistry()
+    eng = _mk_engine(smoke_state, prefill_chunk=8, tracer=tracer,
+                     registry=registry)
+    reqs = _requests(cfg, [(9, 4, 1.0), (7, 3, 0.4), (12, 3, 1.0)])
+    eng.generate(reqs, mode="continuous")
+
+    obj = tracer.to_chrome()
+    assert validate_chrome_trace(obj) == []
+    evs = obj["traceEvents"]
+    assert len(evs) > 0
+
+    # request lifecycle: every request gets its instants and synthesized
+    # duration spans on its own track
+    req_names = _names(evs, CAT_REQUEST)
+    assert {"submit", "admit", "prefill_end", "first_token", "finish",
+            "request", "queue", "prefill", "decode"} <= req_names
+    for rid in range(3):
+        track = [e for e in evs if e["tid"] == request_tid(rid)]
+        spans = {e["name"] for e in track if e["ph"] == "X"}
+        assert {"request", "queue", "prefill", "decode"} <= spans
+
+    # per-iteration anatomy on the engine track
+    assert {"plan", "dispatch", "commit"} <= _names(evs, CAT_ITER)
+
+    # scheduler decisions carry reasons
+    sched = [e for e in evs if e.get("cat") == CAT_SCHED]
+    assert sched and all("reason" in e["args"] for e in sched)
+    assert {"route", "admit"} <= {e["name"] for e in sched}
+
+    # the registry saw the same run
+    snap = registry.snapshot()
+    assert snap["repro_requests_finished_total"] == 3
+    assert snap["repro_generated_tokens_total"] == 10
+    assert snap["repro_kv_free_blocks"] > 0
+    text = registry.prometheus_text()
+    assert "repro_ttft_seconds_bucket" in text
+
+
+def test_traced_preemption_has_reason(smoke_state):
+    cfg = smoke_state[0]
+    tracer = make_tracer(True)
+    eng = _mk_engine(smoke_state, max_len=32, block_size=4, num_blocks=5,
+                     prefill_chunk=4, tracer=tracer)
+    reqs = _requests(cfg, [(12, 6, 1.0), (12, 6, 1.0)])
+    eng.generate(reqs, mode="continuous")
+    assert eng.last_metrics.preemptions > 0
+    evs = tracer.chrome_events()
+    assert validate_chrome_trace(tracer.to_chrome()) == []
+    pre = [e for e in evs
+           if e.get("cat") == CAT_SCHED and e["name"] == "preempt"]
+    assert pre
+    for e in pre:
+        assert e["args"]["reason"] in ("cache_pressure", "prefill_pinned")
+        assert e["args"]["policy"] == "youngest_first"
+    # every preemption re-queues with a reason too
+    assert any(e["name"] == "requeue"
+               and e["args"]["reason"] == "preempt_recompute"
+               for e in evs if e.get("cat") == CAT_SCHED)
+
+
+def test_traced_spec_round_events(smoke_state):
+    cfg = smoke_state[0]
+    from repro.spec import SpecConfig
+    tracer = make_tracer(True)
+    eng = _mk_engine(smoke_state, prefill_chunk=8, tracer=tracer,
+                     spec=SpecConfig(draft_rank=0.7, spec_len=2,
+                                     adaptive_k=True))
+    reqs = _requests(cfg, [(8, 5, 1.0), (7, 4, 1.0)])
+    eng.generate(reqs, mode="continuous")
+    obj = tracer.to_chrome()
+    assert validate_chrome_trace(obj) == []
+    evs = obj["traceEvents"]
+    spec_names = _names(evs, "spec")
+    assert {"plan", "verify", "spec_round"} <= spec_names
+    rounds = [e for e in evs if e["name"] == "spec_round"]
+    assert all({"draft", "verify", "accepted"} <= set(e["args"])
+               for e in rounds)
+    ak = [e for e in evs if e["name"] == "adaptive_k"]
+    assert ak and all(
+        e["args"]["action"] in ("grow", "shrink", "hold")
+        and "reason" in e["args"] for e in ak)
