@@ -29,6 +29,15 @@ A third workload benchmarks the **device-resident sampling pipeline**:
     ``benchmarks/BENCH_sampling.json``; the acceptance bar is >= 1.3x
     tokens/s for the device leg at the 128k-vocab point.
 
+A fifth measures **prefix caching** (``--prefix-sweep``):
+
+  * a 120-token shared system prompt + unique tails served cache-off vs
+    cache-on: token streams must be bit-identical, and the mean TTFT over
+    the requests that hit the cache must drop >= 2x at no tokens/s loss;
+    a second, disjoint-prompt stream bounds the zero-hit bookkeeping
+    overhead at <= 2% tokens/s. Results land in
+    ``benchmarks/BENCH_prefix.json``.
+
 A fourth measures the **observability overhead** (``--obs-overhead``):
 
   * the same decode-bound stream served with observability fully off
@@ -254,6 +263,126 @@ def obs_overhead(out_path="benchmarks/BENCH_obs.json", reps=3):
     print(f"# wrote {path}")
 
 
+def _shared_prefix_stream(cfg, n, rng, shared=120):
+    """Prefix-cache workload: every request opens with the same
+    ``shared``-token system prompt and ends in a short unique tail; with a
+    small batch the later admissions find the prefix registered and skip
+    almost all of their prefill."""
+    head = rng.integers(0, cfg.vocab_size, shared).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(4, 9))).astype(np.int32)
+        reqs.append(Request(prompt=np.concatenate([head, tail]),
+                            max_new_tokens=4, budget=1.0))
+    return reqs
+
+
+def prefix_sweep(out_path="benchmarks/BENCH_prefix.json", reps=5):
+    """Prefix caching on vs off.
+
+    Leg 1 (shared-prefix stream): mean TTFT over the requests that
+    actually HIT the cache, compared against the same requests with the
+    cache off — the acceptance bar is a >= 2x cut at no tokens/s loss.
+    Token streams are asserted bit-identical between legs first.
+
+    Leg 2 (zero-hit stream): disjoint prompts, so every probe misses;
+    best-of-N tokens/s on vs off bounds the bookkeeping overhead, with a
+    <= 2% acceptance bar."""
+    cfg = get_config("gpt2-small", smoke=True)
+    rng = np.random.default_rng(0)
+    source = make_source(cfg.vocab_size, 64, 4, seed=0)
+    dense = cm.instantiate(tfm.model_spec(cfg), jax.random.PRNGKey(0))
+    state = build_flexrank_state(cfg, dense, source)
+
+    def mk(prefix):
+        return ElasticEngine(cfg, *state, max_batch=2, max_len=160,
+                             block_size=8, prefill_chunk=8,
+                             prefix_cache=prefix)
+
+    reqs = _shared_prefix_stream(cfg, 16, rng)
+    off, on = mk(False), mk(True)
+    base = [r.tokens for r in off.generate(reqs, mode="continuous")]
+    res = on.generate(reqs, mode="continuous")      # warm + identity pass
+    for a, r in zip(base, res):
+        np.testing.assert_array_equal(a, r.tokens)  # cache must be invisible
+
+    _, wall_off, tps_off = _run(off, reqs, "continuous")
+    m_off = off.last_metrics
+    _, wall_on, tps_on = _run(on, reqs, "continuous")
+    m_on = on.last_metrics
+    hit_ids = [i for i, t in m_on.traces.items() if t.prefix_hit_tokens > 0]
+    assert hit_ids, "shared-prefix stream produced no cache hits"
+    ttft_off = float(np.mean([m_off.traces[i].ttft for i in hit_ids]))
+    ttft_on = float(np.mean([m_on.traces[i].ttft for i in hit_ids]))
+    cut = ttft_off / max(ttft_on, 1e-9)
+    s_on = m_on.summary()
+    emit("prefix_off", wall_off * 1e6, f"{tps_off:.1f}")
+    emit("prefix_on", wall_on * 1e6, f"{tps_on:.1f}")
+    emit("prefix_hit_ttft_ms_off", ttft_off * 1e6, f"{ttft_off*1e3:.1f}")
+    emit("prefix_hit_ttft_ms_on", ttft_on * 1e6, f"{ttft_on*1e3:.1f}")
+    emit("prefix_hit_ttft_cut", ttft_on * 1e6, f"{cut:.2f}x")
+    print(f"# prefix cache: {s_on['prefix_hits']:.0f}/{len(reqs)} hits, "
+          f"{s_on['prefix_hit_tokens']:.0f} prompt tokens reused")
+    if cut < 2.0:
+        print(f"# WARNING: cache-hit TTFT cut {cut:.2f}x < 2.0x acceptance")
+    if tps_on < tps_off * 0.98:
+        print(f"# WARNING: cache-on tokens/s ({tps_on:.1f}) fell behind "
+              f"cache-off ({tps_off:.1f}) on the hit workload")
+
+    # ---------------- zero-hit overhead bound (disjoint prompts)
+    zreqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                         int(rng.integers(8, 24)))
+                     .astype(np.int32), max_new_tokens=8, budget=1.0)
+             for _ in range(16)]
+    zoff, zon = mk(False), mk(True)
+    zbase = [r.tokens for r in zoff.generate(zreqs, mode="continuous")]
+    for a, r in zip(zbase, zon.generate(zreqs, mode="continuous")):
+        np.testing.assert_array_equal(a, r.tokens)
+    zw_off = zw_on = None
+    for _ in range(reps):                     # interleaved best-of-N
+        _, w, _ = _run(zoff, zreqs, "continuous")
+        zw_off = w if zw_off is None or w < zw_off else zw_off
+        _, w, _ = _run(zon, zreqs, "continuous")
+        zw_on = w if zw_on is None or w < zw_on else zw_on
+    assert zon.last_metrics.summary()["prefix_hits"] == 0
+    ztps_off, ztps_on = (sum(r.max_new_tokens for r in zreqs) / zw_off,
+                         sum(r.max_new_tokens for r in zreqs) / zw_on)
+    overhead = 1.0 - ztps_on / ztps_off
+    emit("prefix_zero_hit_off", zw_off * 1e6, f"{ztps_off:.1f}")
+    emit("prefix_zero_hit_on", zw_on * 1e6, f"{ztps_on:.1f}")
+    emit("prefix_zero_hit_overhead_pct", zw_on * 1e6,
+         f"{overhead * 100:.2f}%")
+    if overhead > 0.02:
+        print(f"# WARNING: zero-hit overhead {overhead * 100:.2f}% > 2% "
+              "tokens/s acceptance bar")
+
+    payload = {
+        "workload": "120-token shared system prompt + unique tails, 16 "
+                    "requests, B=2, max_new=4, prefill_chunk=8; zero-hit "
+                    "leg: disjoint prompts, best-of-%d" % reps,
+        "shared_prefix": {
+            "off": {"tokens_per_s": tps_off, "wall_s": wall_off,
+                    "hit_requests_ttft_mean_s": ttft_off},
+            "on": {"tokens_per_s": tps_on, "wall_s": wall_on,
+                   "hit_requests_ttft_mean_s": ttft_on,
+                   "hits": s_on["prefix_hits"],
+                   "hit_tokens": s_on["prefix_hit_tokens"]},
+            "hit_ttft_cut": cut,
+        },
+        "zero_hit": {
+            "off": {"tokens_per_s": ztps_off, "wall_s": zw_off},
+            "on": {"tokens_per_s": ztps_on, "wall_s": zw_on},
+            "overhead_frac": overhead,
+        },
+        "acceptance": "hit_ttft_cut >= 2.0 and zero_hit.overhead_frac "
+                      "<= 0.02 and token streams bit-identical",
+    }
+    path = pathlib.Path(out_path)
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {path}")
+
+
 def main(argv=()):
     # argv defaults to empty (NOT sys.argv): the benchmarks.run harness
     # imports this module and calls main() in-process, so parsing the
@@ -267,12 +396,20 @@ def main(argv=()):
                     help="measure tracing+metrics overhead (on vs off "
                          "tokens/s) instead of the classic workloads; "
                          "refreshes benchmarks/BENCH_obs.json")
+    ap.add_argument("--prefix-sweep", action="store_true",
+                    help="measure prefix caching on vs off (hit-request "
+                         "TTFT cut on a shared-prefix stream, zero-hit "
+                         "overhead bound) instead of the classic "
+                         "workloads; refreshes benchmarks/BENCH_prefix.json")
     args = ap.parse_args(list(argv))
     if args.sampling_sweep:
         sampling_sweep()
         return
     if args.obs_overhead:
         obs_overhead()
+        return
+    if args.prefix_sweep:
+        prefix_sweep()
         return
     cfg = get_config("gpt2-small", smoke=True)
     rng = np.random.default_rng(0)

@@ -78,6 +78,12 @@ def main(argv=None):
                          "(0 = greedy argmax)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="top-k truncation when sampling (0 = off)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="automatic prefix caching: refcounted KV blocks "
+                         "with a token-prefix index, so requests sharing a "
+                         "prompt prefix reuse its K/V instead of "
+                         "re-prefilling (default follows the "
+                         "REPRO_PREFIX_CACHE env knob, off otherwise)")
     ap.add_argument("--host-sampling", action="store_true",
                     help="sample on the host (the oracle path: gathered "
                          "logits ship off-device, python per-sequence "
@@ -119,6 +125,7 @@ def main(argv=None):
                            prefill_order=args.prefill_order,
                            spec=spec,
                            device_sampling=not args.host_sampling,
+                           prefix_cache=True if args.prefix_cache else None,
                            tracer=tracer, registry=registry)
 
     budgets = [float(b) for b in args.budgets.split(",")]
@@ -164,6 +171,9 @@ def main(argv=None):
             print(f"# chunked prefill: chunk={args.prefill_chunk}, "
                   f"budget={engine.token_budget}, "
                   f"{s['mixed_iterations']:.0f} mixed iterations")
+        if engine.prefix_cache:
+            print(f"# prefix cache: {s['prefix_hits']:.0f} hits, "
+                  f"{s['prefix_hit_tokens']:.0f} prompt tokens reused")
         if args.spec_draft_rank and s["spec_rounds"]:
             mode = ("verify-only" if args.temperature > 0
                     and args.spec_no_stochastic

@@ -95,6 +95,7 @@ class ElasticEngine:
                  prefill_order: str = "fifo",
                  spec: "Optional[SpecConfig]" = None,
                  device_sampling: Optional[bool] = None,
+                 prefix_cache: Optional[bool] = None,
                  tracer=None, registry=None,
                  use_pallas=False):
         self.cfg = cfg
@@ -146,6 +147,15 @@ class ElasticEngine:
             env = os.environ.get("REPRO_DEVICE_SAMPLING")
             device_sampling = env != "0" if env is not None else True
         self.device_sampling = bool(device_sampling)
+        # automatic prefix caching (kv_cache.PagedKVCache): admitted
+        # requests probe a hash-of-token-prefix index and share full prompt
+        # blocks already resident instead of re-prefilling them; greedy
+        # token streams are bit-identical either way. ``None`` resolves via
+        # the REPRO_PREFIX_CACHE env knob (default off) so whole test
+        # suites flip it like the other serving matrices.
+        if prefix_cache is None:
+            prefix_cache = os.environ.get("REPRO_PREFIX_CACHE", "0") == "1"
+        self.prefix_cache = bool(prefix_cache)
         # observability (repro.obs): ``tracer`` collects structured span/
         # instant events (request lifecycle, iteration phases, scheduler
         # decisions, allocator traffic) for Chrome-trace/JSONL export —
@@ -370,7 +380,8 @@ class ElasticEngine:
         params = self._realize(row)
         cache = PagedKVCache(self.cfg, max_batch=self.max_batch,
                              max_len=self.max_len, block_size=self.block_size,
-                             num_blocks=self.num_blocks)
+                             num_blocks=self.num_blocks,
+                             prefix_cache=self.prefix_cache)
         cache.tracer = self.tracer
         batcher = ContinuousBatcher(self.max_batch)
         tr = self.tracer
@@ -395,6 +406,14 @@ class ElasticEngine:
                     raise CacheOOM(f"sequence of {seq.prompt_len} tokens "
                                    f"exceeds max_len {self.max_len}")
                 cache.open_slot(slot)
+                # prefix-cache probe: any full prompt blocks already
+                # resident map straight into the slot, and prefill resumes
+                # past them (a full hit leaves exactly the final chunk)
+                hit = cache.probe_prefix(slot, seq.request.prompt)
+                if hit:
+                    seq.prefill_pos = hit
+                    metrics.on_prefix_hit(seq.req_id, hit,
+                                          cache.cached_blocks)
                 batcher.seat_prefill(slot, seq)
             if batcher.num_active == 0:
                 break                        # row drained (all slots free)
@@ -480,6 +499,10 @@ class ElasticEngine:
                 seq.prefill_pos = start + n
                 total_chunk += n
                 metrics.on_prefill_chunk(n)
+                # the chunk's K/V is on device now — index every prompt
+                # block it completed so later admissions can share it
+                cache.register_prefix(slot, seq.request.prompt,
+                                      seq.prefill_pos)
                 if seq.prefill_pos == seq.prompt_len:
                     metrics.on_prefill_end(seq.req_id)
                     ri = finish_rows[slot]
@@ -507,7 +530,8 @@ class ElasticEngine:
                                   "prefill": total_chunk})
             if self.registry is not None:
                 metrics.on_cache_stats(cache.allocator.free_count,
-                                       cache.allocator.fragmentation())
+                                       cache.allocator.fragmentation(),
+                                       prefix=cache.stats)
                 metrics.on_queue_depths(
                     {r: len(q) for r, q in sched.queues.items()})
 

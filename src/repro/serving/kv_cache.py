@@ -1,5 +1,6 @@
 """Block-paged KV cache: a global pool of fixed-size blocks per attention
-layer, a host-side free-list allocator, and per-slot block tables.
+layer, a host-side refcounted allocator with automatic prefix caching, and
+per-slot block tables.
 
 Memory layout (vLLM-style, adapted to scanned segments): every attention
 segment owns K/V pools shaped (count, num_blocks, block_size, Hkv, hd) —
@@ -8,15 +9,28 @@ block table that addresses the same slots in every layer's pool. Block 0 is
 the reserved null block: it backs unused table entries and idle batch slots,
 so device-side gathers never index out of bounds.
 
+Prefix caching: blocks carry a refcount, and full blocks of prompt tokens are
+indexed by the exact token prefix they hold. A newly admitted request probes
+the index block by block; every hit shares the existing block (refcount++)
+and skips its prefill entirely. Blocks whose refcount drops to zero while
+still indexed stay resurrectable in a warm LRU tier until the pool needs them
+back. Writes into a block visible to more than one holder copy-on-write the
+block on device first; writes into an indexed block drop its index entry
+(the canonical content is about to diverge).
+
 The allocator is deliberately host-side numpy (free list + LIFO reuse):
 allocation decisions happen between device steps, at batch-slot granularity,
 and never trace into jit.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import heapq
 import math
-from typing import Dict, List, Optional
+import os
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,30 +46,171 @@ class CacheOOM(Exception):
     """Raised when the block pool cannot cover an allocation request."""
 
 
-class BlockAllocator:
-    """LIFO free list over ``num_blocks`` blocks; block 0 is never handed out."""
+class FreeRunTracker:
+    """Incrementally maintained id-contiguous runs over the free-block set.
 
-    def __init__(self, num_blocks: int):
+    Replaces the old per-query ``sorted(free_list)`` scan — O(F log F) on the
+    host hot path every iteration — with O(log F) amortised updates on each
+    alloc/free and an O(1) amortised max-run query (lazy-deletion heap).
+    Runs are kept as start->end / end->start maps plus a sorted list of run
+    starts so that removing an *interior* block (prefix-hit resurrection
+    picks specific ids, not LIFO order) can find its containing run.
+    """
+
+    def __init__(self, lo: int, hi: int):
+        # one full run [lo, hi] (empty when hi < lo)
+        self._heads: Dict[int, int] = {}      # run start -> run end
+        self._tails: Dict[int, int] = {}      # run end -> run start
+        self._starts: List[int] = []          # sorted run starts
+        self._heap: List = []                 # lazy max-heap of (-len, start)
+        self.count = 0
+        if hi >= lo:
+            self._new_run(lo, hi)
+            self.count = hi - lo + 1
+
+    def _new_run(self, s: int, e: int) -> None:
+        self._heads[s] = e
+        self._tails[e] = s
+        bisect.insort(self._starts, s)
+        heapq.heappush(self._heap, (-(e - s + 1), s))
+
+    def _drop_run(self, s: int) -> int:
+        e = self._heads.pop(s)
+        del self._tails[e]
+        i = bisect.bisect_left(self._starts, s)
+        del self._starts[i]
+        return e
+
+    def add(self, b: int) -> None:
+        """Block ``b`` became free: merge with adjacent runs."""
+        left = self._tails.get(b - 1)
+        right = self._heads.get(b + 1)
+        s = b if left is None else left
+        e = b if right is None else right
+        if left is not None:
+            self._drop_run(left)
+        if right is not None:
+            self._drop_run(b + 1)
+        self._new_run(s, e)
+        self.count += 1
+
+    def remove(self, b: int) -> None:
+        """Block ``b`` left the free set: split its containing run."""
+        i = bisect.bisect_right(self._starts, b) - 1
+        assert i >= 0, b
+        s = self._starts[i]
+        e = self._drop_run(s)
+        assert s <= b <= e, (s, b, e)
+        if s <= b - 1:
+            self._new_run(s, b - 1)
+        if b + 1 <= e:
+            self._new_run(b + 1, e)
+        self.count -= 1
+
+    def max_run(self) -> int:
+        while self._heap:
+            neg, s = self._heap[0]
+            e = self._heads.get(s)
+            if e is not None and e - s + 1 == -neg:
+                return -neg
+            heapq.heappop(self._heap)       # stale entry from a merged run
+        return 0
+
+
+class BlockAllocator:
+    """Refcounted block pool; block 0 is never handed out.
+
+    Free blocks live in two tiers: a plain LIFO list (``_free``) for blocks
+    with no cached content, and a warm FIFO tier (``_cached``) for blocks the
+    prefix index still references — those are only recycled (oldest first,
+    via ``evict_hook``) once the plain tier runs dry, so recently shared
+    prefixes survive as long as the pool allows. ``free_count`` counts both
+    tiers: every block in either is reclaimable on demand.
+    """
+
+    def __init__(self, num_blocks: int,
+                 evict_hook: Optional[Callable[[int], None]] = None):
         assert num_blocks >= 2, num_blocks
         self.num_blocks = num_blocks
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
-        self._held: set = set()
+        self._cached: "OrderedDict[int, None]" = OrderedDict()
+        self._ref = np.zeros(num_blocks, np.int32)
+        self._is_cached = np.zeros(num_blocks, bool)
+        self._runs = FreeRunTracker(1, num_blocks - 1)
+        self.evict_hook = evict_hook
 
     @property
     def free_count(self) -> int:
-        return len(self._free)
+        return len(self._free) + len(self._cached)
+
+    @property
+    def cached_free_count(self) -> int:
+        return len(self._cached)
+
+    def refcount(self, b: int) -> int:
+        return int(self._ref[b])
+
+    def live_blocks(self) -> List[int]:
+        return [b for b in range(1, self.num_blocks) if self._ref[b] > 0]
 
     def alloc(self, n: int) -> List[int]:
-        if n > len(self._free):
-            raise CacheOOM(f"need {n} blocks, {len(self._free)} free")
-        out = [self._free.pop() for _ in range(n)]
-        self._held.update(out)
+        if n > self.free_count:
+            raise CacheOOM(f"need {n} blocks, {self.free_count} free")
+        out = []
+        for _ in range(n):
+            if self._free:
+                b = self._free.pop()
+            else:
+                # recycle the oldest warm block; the hook (PagedKVCache)
+                # drops its prefix-index entry before the id is reused
+                b, _ = self._cached.popitem(last=False)
+                self._is_cached[b] = False
+                if self.evict_hook is not None:
+                    self.evict_hook(b)
+            self._ref[b] = 1
+            self._runs.remove(b)
+            out.append(b)
         return out
+
+    def incref(self, b: int) -> None:
+        assert self._ref[b] >= 1, f"incref of free block {b}"
+        self._ref[b] += 1
+
+    def decref(self, b: int) -> bool:
+        """Drop one reference; returns True if the block became free."""
+        assert self._ref[b] >= 1, f"double free of block {b}"
+        self._ref[b] -= 1
+        if self._ref[b] > 0:
+            return False
+        if self._is_cached[b]:
+            self._cached[b] = None          # warm tier: resurrectable
+        else:
+            self._free.append(b)
+        self._runs.add(b)
+        return True
 
     def free(self, blocks: List[int]) -> None:
         for b in blocks:
-            assert b in self._held, f"double free of block {b}"
-            self._held.discard(b)
+            self.decref(b)
+
+    def take(self, b: int) -> None:
+        """Resurrect a specific warm free block (prefix hit on a block whose
+        last holder already left)."""
+        assert self._ref[b] == 0 and b in self._cached, b
+        del self._cached[b]
+        self._ref[b] = 1
+        self._runs.remove(b)
+
+    def set_cached(self, b: int, flag: bool) -> None:
+        """Mark/unmark a *live* block as referenced by the prefix index."""
+        assert self._ref[b] >= 1, b
+        self._is_cached[b] = flag
+
+    def uncache(self, b: int) -> None:
+        """Drop the index mark; moves a warm free block to the plain tier."""
+        self._is_cached[b] = False
+        if self._ref[b] == 0 and b in self._cached:
+            del self._cached[b]
             self._free.append(b)
 
     def fragmentation(self) -> float:
@@ -64,10 +219,20 @@ class BlockAllocator:
         one id-contiguous run (or the list is empty); approaches 1 when the
         free ids are scattered singletons. Id-contiguity is the proxy that
         matters here: contiguous runs are what LIFO reuse hands back to the
-        next multi-block allocation as a dense table extent."""
-        if not self._free:
+        next multi-block allocation as a dense table extent. Served from the
+        incremental run tracker — O(1) amortised instead of sorting the free
+        list on every engine iteration."""
+        n = self._runs.count
+        if n == 0:
             return 0.0
-        ids = sorted(self._free)
+        return 1.0 - self._runs.max_run() / n
+
+    def fragmentation_exact(self) -> float:
+        """Reference implementation (full sort) for parity tests."""
+        ids = sorted(self._free) + sorted(self._cached)
+        ids.sort()
+        if not ids:
+            return 0.0
         best = run = 1
         for a, b in zip(ids, ids[1:]):
             run = run + 1 if b == a + 1 else 1
@@ -83,26 +248,56 @@ class SlotState:
     num_tokens: int = 0          # tokens written (prompt + generated)
 
 
+@dataclasses.dataclass
+class PrefixCacheStats:
+    """Cumulative prefix-cache counters for one PagedKVCache."""
+    hits: int = 0                # admissions that matched >= 1 block
+    misses: int = 0              # admissions that matched nothing
+    hit_tokens: int = 0          # prompt tokens skipped via hits
+    shared_tokens: int = 0       # draft-slot tokens aliased from targets
+    cow_copies: int = 0          # device block copies on shared-block writes
+    evictions: int = 0           # warm blocks recycled out of the index
+
+
+def _env_prefix_cache_default() -> bool:
+    return os.environ.get("REPRO_PREFIX_CACHE", "0") == "1"
+
+
 class PagedKVCache:
     """Device block pools + host allocator + per-slot block tables.
 
     ``max_batch`` fixed decode slots; each slot's table covers up to
     ``max_blocks_per_seq`` blocks. ``num_blocks`` counts usable blocks
-    (the null block is allocated on top).
+    (the null block is allocated on top). With ``prefix_cache`` on, full
+    prompt blocks are indexed by their exact token prefix and shared across
+    slots (see module docstring); off, the allocator degenerates to the
+    plain refcount-1 free list and every probe is a miss.
     """
 
     def __init__(self, cfg: ModelConfig, *, max_batch: int, max_len: int,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, prefix_cache: Optional[bool] = None):
         assert block_size >= 1
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
         self.block_size = block_size
         self.max_blocks_per_seq = math.ceil(max_len / block_size)
+        # pow2 ceiling of the table width: the widest shape jit may see.
+        # active_max_blocks buckets into {1, 2, 4, ..., padded} so every
+        # width is a bucketing fixed point — no surprise late recompiles
+        # when max_blocks_per_seq itself is not a power of two.
+        self.padded_max_blocks = 1
+        while self.padded_max_blocks < self.max_blocks_per_seq:
+            self.padded_max_blocks *= 2
+        self._seen_widths: set = set()
         if num_blocks is None:
             num_blocks = max_batch * self.max_blocks_per_seq
-        self.allocator = BlockAllocator(num_blocks + 1)   # +1: null block
+        if prefix_cache is None:
+            prefix_cache = _env_prefix_cache_default()
+        self.prefix_cache = bool(prefix_cache)
+        self.allocator = BlockAllocator(num_blocks + 1,   # +1: null block
+                                        evict_hook=self._on_evict)
         hd = cfg.resolved_head_dim
         self.pools = []
         for seg in cfg.segments:
@@ -113,6 +308,12 @@ class PagedKVCache:
         self.slots: List[Optional[SlotState]] = [None] * max_batch
         self._tables = np.full((max_batch, self.max_blocks_per_seq),
                                NULL_BLOCK, np.int32)
+        # prefix index: exact token-prefix bytes -> block id holding the
+        # final block of that prefix, plus the reverse map for eviction.
+        # Keys are the raw int32 token bytes — collision-free by design.
+        self._prefix_index: Dict[bytes, int] = {}
+        self._block_key: Dict[int, bytes] = {}
+        self.stats = PrefixCacheStats()
         # observability: the engine points this at its Tracer; the default
         # null tracer keeps every event site a single attribute check
         self.tracer = NULL_TRACER
@@ -165,14 +366,21 @@ class PagedKVCache:
         if st.num_tokens + n > self.max_len:
             raise CacheOOM(f"slot {slot}: {st.num_tokens + n} tokens exceed "
                            f"max_len {self.max_len}")
-        cap = (len(st.blocks) * self.block_size - st.num_tokens
-               + self.allocator.free_count * self.block_size)
+        slack = len(st.blocks) * self.block_size - st.num_tokens
+        free = self.allocator.free_count
+        if slack and self._boundary_needs_cow(slot):
+            # writing into the partial boundary block requires a private
+            # copy first, which consumes one free block before any growth
+            cap = 0 if free == 0 else slack + (free - 1) * self.block_size
+        else:
+            cap = slack + free * self.block_size
         if n > cap:
             if not clip:
                 raise CacheOOM(f"need room for {n} tokens, {cap} available")
             n = max(0, cap)
         if n == 0:
             return 0
+        self._make_boundary_writable(slot)
         need = self.blocks_needed(st.num_tokens + n) - len(st.blocks)
         if need > 0:
             fresh = self.allocator.alloc(need)
@@ -201,11 +409,20 @@ class PagedKVCache:
                     "block_alloc", CAT_ALLOC,
                     args={"slot": slot, "blocks": 1, "tokens": 1,
                           "free": self.allocator.free_count})
+        else:
+            self._make_boundary_writable(slot)
         st.num_tokens += 1
 
     def token_append_needs_block(self, slot: int) -> bool:
+        """True when the next ``append_token`` must allocate: either the
+        write position sits on a block boundary, or it lands inside a block
+        shared with another holder (copy-on-write needs a fresh block)."""
         st = self.slots[slot]
-        return st is not None and st.num_tokens % self.block_size == 0
+        if st is None:
+            return False
+        if st.num_tokens % self.block_size == 0:
+            return True
+        return self._boundary_needs_cow(slot)
 
     def truncate_slot(self, slot: int, num_tokens: int) -> int:
         """Rollback: rewind the slot's write position to ``num_tokens`` and
@@ -245,6 +462,169 @@ class PagedKVCache:
         self.slots[slot] = None
         self._tables[slot, :] = NULL_BLOCK
 
+    # ----------------------------------------------------- prefix caching
+
+    def _prefix_key(self, tokens: np.ndarray, nblocks: int) -> bytes:
+        return tokens[: nblocks * self.block_size].tobytes()
+
+    def probe_prefix(self, slot: int, tokens) -> int:
+        """Probe the prefix index for the longest full-block hit on
+        ``tokens`` and map the matched blocks into the (freshly opened,
+        empty) slot. Returns the number of prompt tokens covered — the
+        caller skips that many tokens of prefill. The match is capped one
+        token short of the prompt so the finishing chunk always has at
+        least one position to run (it produces the first sampled token).
+        """
+        if not self.prefix_cache:
+            return 0
+        st = self.slots[slot]
+        assert st is not None and not st.blocks and st.num_tokens == 0, slot
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        limit = (len(toks) - 1) // self.block_size
+        blocks: List[int] = []
+        for i in range(limit):
+            b = self._prefix_index.get(self._prefix_key(toks, i + 1))
+            if b is None:
+                break
+            blocks.append(b)
+        if not blocks:
+            self.stats.misses += 1
+            if self.tracer.enabled:
+                self.tracer.instant("prefix_miss", CAT_ALLOC,
+                                    args={"slot": slot, "tokens": len(toks)})
+            return 0
+        for b in blocks:
+            if self.allocator.refcount(b) == 0:
+                self.allocator.take(b)      # resurrect from the warm tier
+            else:
+                self.allocator.incref(b)
+        st.blocks.extend(blocks)
+        self._tables[slot, : len(blocks)] = blocks
+        st.num_tokens = len(blocks) * self.block_size
+        self.stats.hits += 1
+        self.stats.hit_tokens += st.num_tokens
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "prefix_hit", CAT_ALLOC,
+                args={"slot": slot, "blocks": len(blocks),
+                      "tokens": st.num_tokens,
+                      "cached": len(self._prefix_index)})
+        return st.num_tokens
+
+    def register_prefix(self, slot: int, tokens, upto: int) -> int:
+        """Index the slot's blocks that are fully covered by the first
+        ``upto`` written prompt tokens. Insert-if-absent: the first writer
+        of a prefix stays canonical, concurrent identical prefills keep
+        their private copies. Returns the number of newly indexed blocks."""
+        if not self.prefix_cache:
+            return 0
+        st = self.slots[slot]
+        assert st is not None, slot
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        nfull = min(upto, len(toks), st.num_tokens) // self.block_size
+        new = 0
+        for i in range(nfull):
+            b = st.blocks[i]
+            if b in self._block_key:
+                continue                    # already canonical (shared hit)
+            key = self._prefix_key(toks, i + 1)
+            if key in self._prefix_index:
+                continue                    # another block owns this prefix
+            self._prefix_index[key] = b
+            self._block_key[b] = key
+            self.allocator.set_cached(b, True)
+            new += 1
+        return new
+
+    def share_prefix(self, src_slot: int, dst_slot: int, plen: int) -> int:
+        """Alias the first full prompt blocks of ``src_slot`` into the empty
+        ``dst_slot`` (spec decoding: the draft slot reuses its target's
+        prompt K/V instead of re-prefilling it at low rank — sound because
+        the pools are rank-agnostic and acceptance only ever commits
+        target-model tokens). Returns the number of tokens shared."""
+        if not self.prefix_cache:
+            return 0
+        src, dst = self.slots[src_slot], self.slots[dst_slot]
+        assert src is not None and dst is not None, (src_slot, dst_slot)
+        assert not dst.blocks and dst.num_tokens == 0, dst_slot
+        nfull = min(plen, src.num_tokens) // self.block_size
+        if nfull <= 0:
+            return 0
+        shared = src.blocks[:nfull]
+        for b in shared:
+            self.allocator.incref(b)
+        dst.blocks.extend(shared)
+        self._tables[dst_slot, :nfull] = shared
+        dst.num_tokens = nfull * self.block_size
+        self.stats.shared_tokens += dst.num_tokens
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "prefix_share", CAT_ALLOC,
+                args={"src": src_slot, "dst": dst_slot, "blocks": nfull,
+                      "tokens": dst.num_tokens})
+        return dst.num_tokens
+
+    @property
+    def cached_blocks(self) -> int:
+        return len(self._prefix_index)
+
+    def _on_evict(self, b: int) -> None:
+        """Allocator recycled a warm block: drop its index entry."""
+        key = self._block_key.pop(b)
+        del self._prefix_index[key]
+        self.stats.evictions += 1
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "prefix_evict", CAT_ALLOC,
+                args={"block": b, "cached": len(self._prefix_index)})
+
+    def _unregister_block(self, b: int) -> None:
+        key = self._block_key.pop(b, None)
+        if key is None:
+            return
+        del self._prefix_index[key]
+        self.allocator.uncache(b)
+
+    def _boundary_needs_cow(self, slot: int) -> bool:
+        st = self.slots[slot]
+        if st.num_tokens % self.block_size == 0 or not st.blocks:
+            return False
+        return self.allocator.refcount(
+            st.blocks[st.num_tokens // self.block_size]) > 1
+
+    def _make_boundary_writable(self, slot: int) -> None:
+        """The next write lands at ``num_tokens``. If that position sits
+        inside an existing block (truncate can rewind mid-block), the block
+        must be exclusively ours — copy-on-write if shared — and must leave
+        the prefix index: its content is about to diverge from its key."""
+        st = self.slots[slot]
+        if st.num_tokens % self.block_size == 0 or not st.blocks:
+            return
+        bi = st.num_tokens // self.block_size
+        if self.allocator.refcount(st.blocks[bi]) > 1:
+            self._cow_block(slot, bi)
+        self._unregister_block(st.blocks[bi])
+
+    def _cow_block(self, slot: int, bi: int) -> None:
+        """Device-side copy of one shared block into a private one, plus the
+        table patch. The old block keeps its refcount minus ours and (if
+        indexed) stays canonical for its prefix — only our copy diverges."""
+        st = self.slots[slot]
+        old = st.blocks[bi]
+        (new,) = self.allocator.alloc(1)
+        for pool in self.pools:
+            for name in ("k", "v"):
+                pool[name] = pool[name].at[:, new].set(pool[name][:, old])
+        st.blocks[bi] = new
+        self._tables[slot, bi] = new
+        self.allocator.decref(old)
+        self.stats.cow_copies += 1
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "cow_copy", CAT_ALLOC,
+                args={"slot": slot, "block_index": bi, "src": old,
+                      "dst": new, "free": self.allocator.free_count})
+
     # ------------------------------------------------------------ device
 
     def host_tables(self, max_blocks: Optional[int] = None, *,
@@ -252,7 +632,17 @@ class PagedKVCache:
         """Host-side copy of the block tables (see ``device_tables``) — for
         callers that dispatch several forwards against one table snapshot
         (donated device uploads cannot be reused across dispatches)."""
-        t = self._tables if max_blocks is None else self._tables[:, :max_blocks]
+        if max_blocks is None:
+            t = self._tables
+        elif max_blocks <= self._tables.shape[1]:
+            t = self._tables[:, :max_blocks]
+        else:
+            # pow2-padded width past the physical table: pad with null
+            # blocks (positions never reach them — they exist only so the
+            # widest jit shape is a bucketing fixed point)
+            pad = np.full((self.max_batch, max_blocks - self._tables.shape[1]),
+                          NULL_BLOCK, np.int32)
+            t = np.concatenate([self._tables, pad], axis=1)
         if null_rows:
             t = np.concatenate(
                 [t, np.full((null_rows, t.shape[1]), NULL_BLOCK, np.int32)])
@@ -287,13 +677,24 @@ class PagedKVCache:
 
     def active_max_blocks(self) -> int:
         """Smallest power-of-two table width covering every live sequence
-        (so jit sees O(log max_blocks_per_seq) distinct shapes)."""
+        (so jit sees O(log max_blocks_per_seq) distinct shapes). Clamped to
+        the pow2-*padded* table width, never the raw ``max_blocks_per_seq``:
+        clamping to a non-pow2 bound used to introduce one extra jit shape
+        the first time the longest sequences filled their tables — a
+        surprise recompile mid-serve."""
         used = max((len(s.blocks) for s in self.slots if s is not None),
                    default=1)
         mb = 1
         while mb < used:
             mb *= 2
-        return min(mb, self.max_blocks_per_seq)
+        mb = min(mb, self.padded_max_blocks)
+        self._seen_widths.add(mb)
+        # every observed width must be a fixed point of the bucketing —
+        # i.e. a pow2 no larger than the padded cap — or jit shape count
+        # stops being O(log max_blocks_per_seq)
+        assert all(w == min(1 << (w - 1).bit_length(), self.padded_max_blocks)
+                   for w in self._seen_widths), self._seen_widths
+        return mb
 
     def update_pools(self, new_caches: Dict) -> None:
         self.pools = [dict(p) for p in new_caches["segments"]]
@@ -307,6 +708,9 @@ class PagedKVCache:
         """
         st = self.slots[slot]
         assert st is not None, slot
+        # legacy whole-prompt path: blind overwrite, so the slot must own
+        # every block exclusively
+        assert all(self.allocator.refcount(b) == 1 for b in st.blocks), slot
         idx = jnp.asarray(np.asarray(st.blocks, np.int32))
         for si, c in enumerate(seg_caches):
             if c is None:

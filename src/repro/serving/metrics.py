@@ -55,6 +55,7 @@ class RequestTrace:
     finish_t: Optional[float] = None
     new_tokens: int = 0
     preemptions: int = 0
+    prefix_hit_tokens: int = 0             # prompt tokens skipped via cache
 
     @property
     def ttft(self) -> Optional[float]:
@@ -140,6 +141,20 @@ class ServingMetrics:
                 "trailing speculative acceptance rate (0.1-weight EWMA)")
             self._m_queue = registry.gauge(
                 "repro_queue_depth", "waiting requests (label row)")
+            self._m_phits = registry.counter(
+                "repro_prefix_cache_hits_total",
+                "admissions that matched >= 1 cached prefix block")
+            self._m_phit_tokens = registry.counter(
+                "repro_prefix_cache_hit_tokens_total",
+                "prompt tokens skipped via prefix-cache hits")
+            self._m_pcached = registry.gauge(
+                "repro_prefix_cached_blocks", "blocks in the prefix index")
+            self._m_pcow = registry.gauge(
+                "repro_prefix_cow_copies",
+                "device copy-on-write block copies (cumulative this run)")
+            self._m_pevict = registry.gauge(
+                "repro_prefix_evictions",
+                "warm blocks recycled out of the prefix index (cumulative)")
         self._accept_ewma: Optional[float] = None
         self.traces: Dict[int, RequestTrace] = {}
         self.decode_steps = 0
@@ -161,6 +176,8 @@ class ServingMetrics:
         self.draft_tokens = 0
         self.accepted_draft_tokens = 0
         self.drafting_seq_rounds = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
         self._start: Optional[float] = None
         self._end: Optional[float] = None
 
@@ -249,13 +266,35 @@ class ServingMetrics:
         if self.registry is not None:
             self._m_occ.set(occupancy)
 
-    def on_cache_stats(self, free_blocks: int, fragmentation: float) -> None:
-        """Free-list level + fragmentation gauges (engine calls this per
-        iteration only when a registry is attached — computing fragmentation
-        walks the free list)."""
+    def on_cache_stats(self, free_blocks: int, fragmentation: float,
+                       prefix=None) -> None:
+        """Free-list level + fragmentation gauges (fragmentation is served
+        from the allocator's incremental run tracker — O(1) amortised, so
+        this is safe on the per-iteration hot path). ``prefix``: an optional
+        ``kv_cache.PrefixCacheStats`` snapshot feeding the prefix-cache
+        gauges."""
         if self.registry is not None:
             self._m_free.set(free_blocks)
             self._m_frag.set(fragmentation)
+            if prefix is not None:
+                self._m_pcow.set(prefix.cow_copies)
+                self._m_pevict.set(prefix.evictions)
+
+    def on_prefix_hit(self, req_id: int, tokens: int,
+                      cached_blocks: int = 0) -> None:
+        """Admission matched ``tokens`` prompt tokens in the prefix index —
+        that many positions skip prefill entirely this attempt."""
+        self.prefix_hits += 1
+        self.prefix_hit_tokens += tokens
+        self.traces[req_id].prefix_hit_tokens = tokens
+        if self.tracer.enabled:
+            self.tracer.instant("prefix_hit", CAT_REQUEST,
+                                tid=request_tid(req_id),
+                                args={"tokens": tokens})
+        if self.registry is not None:
+            self._m_phits.inc()
+            self._m_phit_tokens.inc(tokens)
+            self._m_pcached.set(cached_blocks)
 
     def on_queue_depths(self, depths: Dict[int, int]) -> None:
         """Per-budget-row waiting-queue depths (gauge labeled by row)."""
@@ -319,6 +358,7 @@ class ServingMetrics:
         # records fresh ones; ``submit_t`` and the preemption counter are
         # the only survivors of an attempt)
         tr.new_tokens = 0
+        tr.prefix_hit_tokens = 0
         tr.admit_t = None
         tr.prefill_end_t = None
         tr.first_token_t = None
@@ -397,4 +437,6 @@ class ServingMetrics:
             # each such round also commits one correction token on top
             "spec_mean_accepted_len": (self.accepted_draft_tokens
                                        / max(self.drafting_seq_rounds, 1)),
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
         }

@@ -126,8 +126,12 @@ class BudgetRouter:
         self._fractions = self.cost_table / float(self.cost_table[-1])
 
     def route(self, budget: float) -> int:
-        feasible = np.flatnonzero(self.cost_table
-                                  <= budget * self.cost_table[-1] + 1)
+        # relative float tolerance only: ``budget * total`` computed from a
+        # row's own fraction must round-trip back to that row, but a row
+        # even 1 param over the requested budget is infeasible (the old
+        # ``+ 1`` integer slack admitted such rows on fine-grained tables)
+        limit = budget * float(self.cost_table[-1]) * (1.0 + 1e-9)
+        feasible = np.flatnonzero(self.cost_table <= limit)
         return int(feasible[-1]) if feasible.size else 0
 
     def deployed_params(self, row: int) -> int:

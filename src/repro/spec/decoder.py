@@ -172,7 +172,8 @@ class SpecDecoder:
         # 2x slots, one allocator: seat s -> target slot s, draft slot B + s
         self.cache = PagedKVCache(
             self.cfg, max_batch=2 * engine.max_batch, max_len=engine.max_len,
-            block_size=engine.block_size, num_blocks=engine.num_blocks)
+            block_size=engine.block_size, num_blocks=engine.num_blocks,
+            prefix_cache=engine.prefix_cache)
         self.cache.tracer = self.tracer
         self.batcher = ContinuousBatcher(engine.max_batch)
         self._round_tables = None    # device block tables, valid per round
@@ -256,6 +257,14 @@ class SpecDecoder:
                                    f"exceeds max_len {eng.max_len}")
                 self.cache.open_slot(seat)
                 self.cache.open_slot(self._draft_slot(seat))
+                # prefix-cache probe on the TARGET slot only; the draft
+                # slot aliases the target's prompt blocks later, once the
+                # sequence reaches decoding (share_prefix in _plan_round)
+                hit = self.cache.probe_prefix(seat, seq.request.prompt)
+                if hit:
+                    seq.prefill_pos = hit
+                    self.metrics.on_prefix_hit(seq.req_id, hit,
+                                               self.cache.cached_blocks)
                 self.batcher.seat_prefill(seat, seq)
             if self.batcher.num_active == 0:
                 break                            # row drained
@@ -302,7 +311,8 @@ class SpecDecoder:
             if eng.registry is not None:
                 self.metrics.on_cache_stats(
                     self.cache.allocator.free_count,
-                    self.cache.allocator.fragmentation())
+                    self.cache.allocator.fragmentation(),
+                    prefix=self.cache.stats)
                 self.metrics.on_queue_depths(
                     {r: len(q) for r, q in sched.queues.items()})
 
@@ -343,8 +353,19 @@ class SpecDecoder:
         for seat in decode_seats:
             seq = self.batcher.slots[seat]
             want = self.spec.request_spec_len(seq)
+            dslot = self._draft_slot(seat)
+            # draft-KV sharing: an empty draft slot aliases its target's
+            # full prompt blocks (refcount++) instead of re-prefilling the
+            # prompt at the draft row — the K/V pools are rank-agnostic,
+            # and acceptance only ever commits target-model tokens, so the
+            # draft's proposal quality is the only thing sharing can
+            # change, never the committed stream
+            if (self.cache.prefix_cache
+                    and self.spec.request_can_draft(seq)
+                    and self.cache.slots[dslot].num_tokens == 0):
+                self.cache.share_prefix(seat, dslot, seq.prompt_len)
             gap = (seq.prompt_len + len(seq.generated)
-                   - self.cache.slots[self._draft_slot(seat)].num_tokens)
+                   - self.cache.slots[dslot].num_tokens)
             wants.append(0 if gap > self.spec.gap_chunk else want)
         grants = dict(zip(decode_seats,
                           Scheduler.split_spec_extras(wants, extras_left)))
@@ -736,6 +757,8 @@ class SpecDecoder:
             seq.prefill_pos = start + n
             total_chunk += n
             metrics.on_prefill_chunk(n)
+            self.cache.register_prefix(seat, seq.request.prompt,
+                                       seq.prefill_pos)
             if seq.prefill_pos == seq.prompt_len:
                 metrics.on_prefill_end(seq.req_id)
                 first = int(chunk_h[finish_rows[seat]])
@@ -834,6 +857,8 @@ class SpecDecoder:
             seq.prefill_pos = start + n
             total_chunk += n
             metrics.on_prefill_chunk(n)
+            self.cache.register_prefix(seat, seq.request.prompt,
+                                       seq.prefill_pos)
             if seq.prefill_pos == seq.prompt_len:
                 metrics.on_prefill_end(seq.req_id)
                 first = self._first_token(seq, logits[flat + n - 1])

@@ -337,12 +337,21 @@ CACHE_KW = dict(max_batch=3, max_len=16, block_size=2, num_blocks=8)
 
 
 def _check_cache_invariants(cache: PagedKVCache):
+    """Refcount-aware allocator/table consistency (degenerates to the PR-2
+    no-sharing checks when the prefix cache is off: every count is 1)."""
     alloc = cache.allocator
-    held = [b for s in cache.slots if s is not None for b in s.blocks]
-    # never leak, never double-allocate, never hand out the null block
-    assert len(held) == len(set(held))
-    assert 0 not in held
-    assert alloc.free_count + len(held) == alloc.num_blocks - 1
+    counts = {}
+    for s in cache.slots:
+        if s is None:
+            continue
+        for b in s.blocks:
+            counts[b] = counts.get(b, 0) + 1
+    # never hand out the null block; refcounts mirror the holders exactly,
+    # so no block sits in a free tier while any slot still references it
+    assert 0 not in counts
+    for b in range(1, alloc.num_blocks):
+        assert alloc.refcount(b) == counts.get(b, 0)
+    assert alloc.free_count + len(counts) == alloc.num_blocks - 1
     for slot, s in enumerate(cache.slots):
         tbl = cache._tables[slot]
         if s is None:
@@ -351,6 +360,12 @@ def _check_cache_invariants(cache: PagedKVCache):
         assert s.num_tokens <= len(s.blocks) * cache.block_size
         assert list(tbl[: len(s.blocks)]) == s.blocks
         assert not tbl[len(s.blocks):].any()
+    # the prefix index stays a bijection onto blocks it actually marked
+    assert len(cache._prefix_index) == len(cache._block_key)
+    for key, b in cache._prefix_index.items():
+        assert cache._block_key[b] == key
+    # the incremental fragmentation tracker never drifts from the exact value
+    assert abs(alloc.fragmentation() - alloc.fragmentation_exact()) < 1e-12
 
 
 def _random_cache_walk(seed, steps=300):
@@ -401,63 +416,220 @@ def test_allocator_exact_exhaustion_and_lifo_reuse():
         a.free([xs[0], xs[0]])                   # double free within one call
 
 
+ALPHABET = np.arange(CACHE_KW["max_len"], dtype=np.int32)
+# three token streams with shared prefixes: stream 1 diverges after two
+# blocks, stream 2 after one — cross-stream probes get partial hits
+STREAMS = [ALPHABET.copy(), ALPHABET.copy(), ALPHABET.copy()]
+STREAMS[1][4:] += 100
+STREAMS[2][2:] += 200
+
+
+def _random_prefix_walk(seed, steps=300):
+    """Seeded random walk over the prefix-cache surface (always runs, with
+    or without hypothesis): probes, registrations, truncate rollbacks, and
+    divergent rewrites interleave with the PR-2 ops while a shadow token
+    model proves no block is recycled at refcount > 0 and copy-on-write
+    preserves every sharer's token identity."""
+    rng = np.random.default_rng(seed)
+    cache = PagedKVCache(CFG_TINY, **CACHE_KW, prefix_cache=True)
+    toks = [None] * CACHE_KW["max_batch"]
+    stream = [0] * CACHE_KW["max_batch"]
+
+    def grow(slot, n, divergent):
+        pos = len(toks[slot])
+        src = STREAMS[stream[slot]][pos: pos + n] + (1000 if divergent else 0)
+        toks[slot].extend(int(t) for t in src)
+
+    for _ in range(steps):
+        op = int(rng.integers(0, 7))
+        slot = int(rng.integers(0, CACHE_KW["max_batch"]))
+        sid = int(rng.integers(0, len(STREAMS)))
+        divergent = bool(rng.integers(0, 2))
+        try:
+            if op == 0 and cache.slots[slot] is None:
+                if rng.integers(0, 2):
+                    n = int(rng.integers(1, 12))
+                    cache.allocate_slot(slot, n)
+                    toks[slot], stream[slot] = [], sid
+                    grow(slot, n, False)
+                else:
+                    cache.open_slot(slot)
+                    hit = cache.probe_prefix(slot, STREAMS[sid])
+                    assert hit % cache.block_size == 0
+                    assert hit <= len(STREAMS[sid]) - 1
+                    toks[slot] = [int(t) for t in STREAMS[sid][:hit]]
+                    stream[slot] = sid
+            elif op == 1 and cache.slots[slot] is not None:
+                want = int(rng.integers(1, 7))
+                room = cache.max_len - cache.slots[slot].num_tokens
+                if room > 0:
+                    got = cache.extend_slot(slot, min(want, room), clip=True)
+                    grow(slot, got, divergent)
+            elif op == 2 and cache.slots[slot] is not None:
+                if cache.slots[slot].num_tokens < cache.max_len:
+                    cache.append_token(slot)
+                    grow(slot, 1, divergent)
+            elif op == 3 and cache.slots[slot] is not None:
+                keep = int(rng.integers(0, cache.slots[slot].num_tokens + 1))
+                cache.truncate_slot(slot, keep)
+                del toks[slot][keep:]
+            elif op == 4 and cache.slots[slot] is not None:
+                cache.register_prefix(
+                    slot, np.asarray(toks[slot], np.int32),
+                    cache.slots[slot].num_tokens)
+            elif op == 5 and cache.slots[slot] is not None:
+                cache.free_slot(slot)
+                toks[slot] = None
+        except CacheOOM:
+            pass                                # OOM is a legal outcome
+        _check_cache_invariants(cache)
+        _check_shared_content(cache, toks)
+    for slot in range(CACHE_KW["max_batch"]):
+        if cache.slots[slot] is not None:
+            cache.free_slot(slot)
+    assert cache.allocator.free_count == cache.allocator.num_blocks - 1
+    assert cache.stats.hits + cache.stats.misses > 0
+    return cache.stats
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_prefix_cache_random_walk_refcounts_and_cow(seed):
+    _random_prefix_walk(seed)
+
+
+def _check_shared_content(cache: PagedKVCache, toks):
+    """COW/unregister soundness via a shadow token model: every pair of
+    slots sharing a block must agree on that block's (covered) tokens, and
+    every indexed block must still hold exactly its key's tokens — a missed
+    copy-on-write or a stale index entry breaks one of the two."""
+    content = {}
+    for slot, s in enumerate(cache.slots):
+        if s is None:
+            continue
+        for bi, b in enumerate(s.blocks):
+            lo = bi * cache.block_size
+            hi = min(s.num_tokens, lo + cache.block_size)
+            if hi <= lo:
+                continue
+            cur = tuple(toks[slot][lo:hi])
+            prev = content.get(b)
+            if prev is not None:
+                n = min(len(prev), len(cur))
+                assert prev[:n] == cur[:n], (b, prev, cur)
+            if prev is None or len(cur) > len(prev or ()):
+                content[b] = cur
+    for b, key in cache._block_key.items():
+        want = np.frombuffer(key, np.int32)[-cache.block_size:]
+        got = content.get(b)
+        if got:
+            assert tuple(want[: len(got)]) == got, (b, want, got)
+
+
 if HAVE_HYPOTHESIS:
 
     class CacheMachine(RuleBasedStateMachine):
         """Stateful property test: arbitrary interleavings of slot claims,
-        chunked growth, decode appends, and frees/preemptions keep the
-        allocator and block tables consistent."""
+        chunked growth, decode appends, frees/preemptions, prefix-cache
+        probes/registrations, truncate rollbacks, and divergent rewrites
+        (the copy-on-write trigger) keep the refcounted allocator, block
+        tables, and prefix index consistent — and sharers token-identical
+        (the shadow-model check in ``_check_shared_content``)."""
 
         def __init__(self):
             super().__init__()
-            self.cache = PagedKVCache(CFG_TINY, **CACHE_KW)
+            self.cache = PagedKVCache(CFG_TINY, **CACHE_KW,
+                                      prefix_cache=True)
+            self.toks = [None] * CACHE_KW["max_batch"]
+            self.stream = [0] * CACHE_KW["max_batch"]
 
         slots = st.integers(0, CACHE_KW["max_batch"] - 1)
+        streams = st.integers(0, len(STREAMS) - 1)
 
-        @rule(slot=slots, n=st.integers(1, 12))
-        def allocate(self, slot, n):
+        def _grow(self, slot, n, divergent):
+            """Model ``n`` tokens written at the slot's current position."""
+            pos = len(self.toks[slot])
+            src = STREAMS[self.stream[slot]][pos: pos + n] + (
+                1000 if divergent else 0)
+            self.toks[slot].extend(int(t) for t in src)
+
+        @rule(slot=slots, sid=streams, n=st.integers(1, 12))
+        def allocate(self, slot, sid, n):
             if self.cache.slots[slot] is None:
                 if self.cache.can_allocate(n):
                     self.cache.allocate_slot(slot, n)
+                    self.toks[slot], self.stream[slot] = [], sid
+                    self._grow(slot, n, False)
                 else:
                     with pytest.raises(CacheOOM):
                         self.cache.allocate_slot(slot, n)
 
-        @rule(slot=slots)
-        def open_empty(self, slot):
-            if self.cache.slots[slot] is None:
-                self.cache.open_slot(slot)
+        @rule(slot=slots, sid=streams)
+        def open_probe(self, slot, sid):
+            """Admission: open an empty slot and probe the prefix index
+            with stream ``sid``'s tokens — any hit maps shared blocks in
+            and the shadow model records exactly the probed tokens."""
+            if self.cache.slots[slot] is not None:
+                return
+            self.cache.open_slot(slot)
+            hit = self.cache.probe_prefix(slot, STREAMS[sid])
+            assert hit % self.cache.block_size == 0
+            assert hit <= len(STREAMS[sid]) - 1
+            self.toks[slot] = [int(t) for t in STREAMS[sid][:hit]]
+            self.stream[slot] = sid
 
-        @rule(slot=slots, n=st.integers(1, 7), clip=st.booleans())
-        def extend(self, slot, n, clip):
+        @rule(slot=slots, n=st.integers(1, 7), clip=st.booleans(),
+              divergent=st.booleans())
+        def extend(self, slot, n, clip, divergent):
             st_ = self.cache.slots[slot]
             if st_ is None or st_.num_tokens + n > self.cache.max_len:
                 return
             if clip:
                 got = self.cache.extend_slot(slot, n, clip=True)
                 assert 0 <= got <= n
+                self._grow(slot, got, divergent)
             else:
                 try:
                     assert self.cache.extend_slot(slot, n) == n
+                    self._grow(slot, n, divergent)
                 except CacheOOM:
                     pass
 
-        @rule(slot=slots)
-        def append(self, slot):
+        @rule(slot=slots, divergent=st.booleans())
+        def append(self, slot, divergent):
             if self.cache.slots[slot] is not None:
                 try:
                     self.cache.append_token(slot)
+                    self._grow(slot, 1, divergent)
                 except CacheOOM:
                     pass
+
+        @rule(slot=slots, frac=st.floats(0.0, 1.0))
+        def truncate(self, slot, frac):
+            st_ = self.cache.slots[slot]
+            if st_ is None:
+                return
+            keep = int(frac * st_.num_tokens)
+            assert self.cache.truncate_slot(slot, keep) >= 0
+            del self.toks[slot][keep:]
+
+        @rule(slot=slots)
+        def register(self, slot):
+            st_ = self.cache.slots[slot]
+            if st_ is None:
+                return
+            self.cache.register_prefix(
+                slot, np.asarray(self.toks[slot], np.int32), st_.num_tokens)
 
         @rule(slot=slots)
         def free(self, slot):
             if self.cache.slots[slot] is not None:
                 self.cache.free_slot(slot)
+                self.toks[slot] = None
 
         @invariant()
         def consistent(self):
             _check_cache_invariants(self.cache)
+            _check_shared_content(self.cache, self.toks)
 
     CacheMachine.TestCase.settings = settings(
         max_examples=25, stateful_step_count=40, deadline=None)

@@ -291,11 +291,21 @@ PAIRS = CACHE_KW["max_batch"] // 2
 
 
 def _check_cache_invariants(cache: PagedKVCache):
+    """Refcount-aware allocator/table consistency: with draft-KV sharing a
+    block may be held by both sides of a pair, so refcounts must mirror the
+    holder tally exactly — no block sits in a free tier while referenced,
+    and sharing never leaks blocks past the paired free."""
     alloc = cache.allocator
-    held = [b for s in cache.slots if s is not None for b in s.blocks]
-    assert len(held) == len(set(held))
-    assert 0 not in held
-    assert alloc.free_count + len(held) == alloc.num_blocks - 1
+    counts = {}
+    for s in cache.slots:
+        if s is None:
+            continue
+        for b in s.blocks:
+            counts[b] = counts.get(b, 0) + 1
+    assert 0 not in counts
+    for b in range(1, alloc.num_blocks):
+        assert alloc.refcount(b) == counts.get(b, 0)
+    assert alloc.free_count + len(counts) == alloc.num_blocks - 1
     for slot, s in enumerate(cache.slots):
         tbl = cache._tables[slot]
         if s is None:
@@ -304,6 +314,8 @@ def _check_cache_invariants(cache: PagedKVCache):
         assert s.num_tokens <= len(s.blocks) * cache.block_size
         assert list(tbl[: len(s.blocks)]) == s.blocks
         assert not tbl[len(s.blocks):].any()
+    assert len(cache._prefix_index) == len(cache._block_key)
+    assert abs(alloc.fragmentation() - alloc.fragmentation_exact()) < 1e-12
 
 
 def test_truncate_slot_rollback():
@@ -328,12 +340,13 @@ def test_truncate_slot_rollback():
 
 def _paired_cache_walk(seed, steps=300):
     """Random walk over PAIRED slots: seat s owns slots (s, PAIRS + s) like
-    the spec decoder; alloc/extend/truncate interleave with paired frees
-    (= preemption). Blocks must be conserved throughout."""
+    the spec decoder; alloc/extend/truncate interleave with draft-KV
+    prefix sharing and paired frees (= preemption). Blocks must be
+    conserved throughout, and shared blocks never leak past a paired free."""
     rng = np.random.default_rng(seed)
-    cache = PagedKVCache(CFG_TINY, **CACHE_KW)
+    cache = PagedKVCache(CFG_TINY, **CACHE_KW, prefix_cache=True)
     for _ in range(steps):
-        op = rng.integers(0, 5)
+        op = rng.integers(0, 6)
         seat = int(rng.integers(0, PAIRS))
         tgt, drf = seat, PAIRS + seat
         try:
@@ -352,7 +365,13 @@ def _paired_cache_walk(seed, steps=300):
                 cache.truncate_slot(slot, int(rng.integers(0, st.num_tokens + 1)))
             elif op == 3:
                 cache.append_token(int(rng.choice([tgt, drf])))
-            elif op == 4:                       # preemption frees the PAIR
+            elif op == 4:                       # draft joins: share the
+                if cache.slots[drf].num_tokens == 0:   # target's prompt KV
+                    plen = int(rng.integers(0, cache.slots[tgt].num_tokens + 1))
+                    shared = cache.share_prefix(tgt, drf, plen)
+                    assert shared % cache.block_size == 0
+                    assert shared <= plen
+            elif op == 5:                       # preemption frees the PAIR
                 cache.free_slot(tgt)
                 cache.free_slot(drf)
         except CacheOOM:
@@ -374,12 +393,14 @@ if HAVE_HYPOTHESIS:
 
     class PairedCacheMachine(RuleBasedStateMachine):
         """Stateful property test for the spec decoder's cache discipline:
-        paired claims/frees, chunked growth on either side, and
-        ``truncate_slot`` rollback keep the allocator consistent."""
+        paired claims/frees, chunked growth on either side, draft-KV
+        prefix sharing, and ``truncate_slot`` rollback keep the
+        refcounted allocator consistent."""
 
         def __init__(self):
             super().__init__()
-            self.cache = PagedKVCache(CFG_TINY, **CACHE_KW)
+            self.cache = PagedKVCache(CFG_TINY, **CACHE_KW,
+                                      prefix_cache=True)
 
         seats = st.integers(0, PAIRS - 1)
         sides = st.booleans()
@@ -418,6 +439,23 @@ if HAVE_HYPOTHESIS:
             freed = self.cache.truncate_slot(slot, keep)
             assert freed >= 0
             assert self.cache.slots[slot].num_tokens == keep
+
+        @rule(seat=seats, frac=st.floats(0.0, 1.0))
+        def share(self, seat, frac):
+            """Draft-KV sharing: an empty draft slot maps in the target's
+            full prompt-prefix blocks by incref, never by copy."""
+            tgt, drf = seat, PAIRS + seat
+            if self.cache.slots[tgt] is None:
+                return
+            if self.cache.slots[drf].num_tokens != 0:
+                return
+            plen = int(frac * self.cache.slots[tgt].num_tokens)
+            shared = self.cache.share_prefix(tgt, drf, plen)
+            assert shared % self.cache.block_size == 0
+            assert shared <= plen
+            nfull = shared // self.cache.block_size
+            assert (self.cache.slots[drf].blocks
+                    == self.cache.slots[tgt].blocks[:nfull])
 
         @rule(seat=seats)
         def free_pair(self, seat):
