@@ -41,10 +41,14 @@ A fifth measures **prefix caching** (``--prefix-sweep``):
 A fourth measures the **observability overhead** (``--obs-overhead``):
 
   * the same decode-bound stream served with observability fully off
-    (NULL_TRACER, no registry — the default no-op fast path) vs fully on
-    (event tracing + metrics registry). Best-of-N tokens/s per leg;
-    results land in ``benchmarks/BENCH_obs.json`` and the acceptance bar
-    is < 3% tokens/s cost for the enabled leg.
+    (NULL_TRACER, no registry — the default no-op fast path) vs the
+    post-hoc plane (unbounded event tracing + metrics registry) vs the
+    always-on live plane (bounded ring flight recorder + registry +
+    watchdog tick + cost-model audit — what ``--statusz-port --watchdog``
+    runs). Best-of-N tokens/s per leg; the live leg's token streams must
+    be bit-identical to telemetry-off; results land in
+    ``benchmarks/BENCH_obs.json`` and the acceptance bar is < 3%
+    tokens/s cost for each enabled leg.
 
 Derived columns: tokens/s per engine, the continuous/drain speedup, and the
 chunked-vs-continuous TTFT ratio with its queue/prefill breakdown. Every
@@ -66,7 +70,8 @@ from repro.data import make_source
 from repro.launch.train import build_flexrank_state
 from repro.models import common as cm
 from repro.models import transformer as tfm
-from repro.obs import MetricsRegistry, make_tracer, validate_chrome_trace
+from repro.obs import (MetricsRegistry, RingTracer, Watchdog, make_tracer,
+                       validate_chrome_trace)
 from repro.serving import ElasticEngine, Request, SamplingParams
 
 PREFILL_CHUNK = 64
@@ -214,49 +219,95 @@ def export_trace(engine, reqs, path):
 
 
 def obs_overhead(out_path="benchmarks/BENCH_obs.json", reps=3):
-    """Tokens/s with observability fully on (tracing + registry) vs fully
-    off (the default no-op path) on the decode-bound stream. Best-of-N per
-    leg, interleaved so host-load drift hits both alike."""
+    """Tokens/s with observability off (the default no-op path) vs the
+    post-hoc plane (unbounded tracing + registry) vs the always-on live
+    plane (bounded ring recorder + registry + watchdog + cost audit — the
+    ``--statusz-port --watchdog`` serve configuration). Best-of-N per
+    leg, interleaved so host-load drift hits all alike; the live leg's
+    token streams must be bit-identical to telemetry-off."""
     cfg = _sweep_config(SWEEP_VOCABS[0])
     rng = np.random.default_rng(0)
     source = make_source(cfg.vocab_size, 64, 4, seed=0)
     dense = cm.instantiate(tfm.model_spec(cfg), jax.random.PRNGKey(0))
     state = build_flexrank_state(cfg, dense, source)
+    # 96 new tokens per request: long enough (~300ms walls) that the
+    # few-ms host jitter of a shared machine stays well under the 3% bar
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 8)
-                    .astype(np.int32), max_new_tokens=32, budget=1.0)
+                    .astype(np.int32), max_new_tokens=96, budget=1.0)
             for _ in range(8)]
     gen = sum(r.max_new_tokens for r in reqs)
 
     def mk(**kw):
-        return ElasticEngine(cfg, *state, max_batch=8, max_len=64,
+        return ElasticEngine(cfg, *state, max_batch=8, max_len=128,
                              block_size=8, prefill_chunk=16, **kw)
 
     off = mk(tracer=make_tracer(False))
     on = mk(tracer=make_tracer(True), registry=MetricsRegistry())
-    off.generate(reqs, mode="continuous")            # warm jit traces
+    # the --statusz-port --watchdog serve configuration: bounded ring,
+    # registry, per-iteration watchdog tick, cost-model audit (thresholds
+    # far above this sub-second run so no rule fires mid-benchmark)
+    live = mk(tracer=RingTracer(4096), registry=MetricsRegistry(),
+              watchdog=Watchdog(stall_s=1e9, ttft_slo_s=None,
+                                intertoken_slo_s=None),
+              costaudit=True)
+    res_off = off.generate(reqs, mode="continuous")  # warm jit traces
     on.generate(reqs, mode="continuous")
-    wall_off = wall_on = None
+    res_live = live.generate(reqs, mode="continuous")
+    for a, b in zip(res_off, res_live):              # telemetry never
+        assert np.array_equal(a.tokens, b.tokens)    # touches sampling
+    # paired reps: each rep runs the three legs back-to-back and yields
+    # its own overhead ratio, so slow drift in host load cancels; the
+    # median pair is far more stable than comparing independent best-of
+    # walls (which lets one leg catch a quiet window the others missed)
+    w_off, w_on, w_live = [], [], []
     for _ in range(reps):
         _, w, _ = _run(off, reqs, "continuous")
-        wall_off = w if wall_off is None or w < wall_off else wall_off
+        w_off.append(w)
+        # fresh unbounded tracer per rep — a post-hoc trace covers one
+        # run; letting it accumulate across reps charges this leg for
+        # GC over every earlier rep's events (the ring leg, bounded by
+        # construction, never pays that)
+        on.tracer = make_tracer(True)
         _, w, _ = _run(on, reqs, "continuous")
-        wall_on = w if wall_on is None or w < wall_on else wall_on
+        w_on.append(w)
+        _, w, _ = _run(live, reqs, "continuous")
+        w_live.append(w)
+    dump = live.tracer.dump()
+    assert not validate_chrome_trace(dump), "live ring dump must validate"
+    wall_off, wall_on, wall_live = min(w_off), min(w_on), min(w_live)
     tps_off, tps_on = gen / wall_off, gen / wall_on
-    overhead = 1.0 - tps_on / tps_off
+    tps_live = gen / wall_live
+    overhead = float(np.median([1.0 - a / b
+                                for a, b in zip(w_off, w_on)]))
+    overhead_live = float(np.median([1.0 - a / b
+                                     for a, b in zip(w_off, w_live)]))
     emit("obs_off", wall_off * 1e6, f"{tps_off:.1f}")
     emit("obs_on", wall_on * 1e6, f"{tps_on:.1f}")
+    emit("obs_live", wall_live * 1e6, f"{tps_live:.1f}")
     emit("obs_overhead_pct", wall_on * 1e6, f"{overhead * 100:.2f}%")
-    if overhead > 0.03:
-        print(f"# WARNING: observability overhead {overhead * 100:.2f}% "
-              "> 3% tokens/s acceptance bar")
+    emit("obs_live_overhead_pct", wall_live * 1e6,
+         f"{overhead_live * 100:.2f}%")
+    for name, frac in (("post-hoc", overhead), ("live", overhead_live)):
+        if frac > 0.03:
+            print(f"# WARNING: {name} observability overhead "
+                  f"{frac * 100:.2f}% > 3% tokens/s acceptance bar")
     payload = {
-        "workload": "greedy decode-bound, B=8, max_new=32, "
-                    "prefill_chunk=16, vocab=8192, best-of-%d" % reps,
+        "workload": "greedy decode-bound, B=8, max_new=96, "
+                    "prefill_chunk=16, vocab=8192, "
+                    "median-of-%d paired reps" % reps,
         "off": {"tokens_per_s": tps_off, "wall_s": wall_off},
         "on": {"tokens_per_s": tps_on, "wall_s": wall_on,
                "trace_events": len(on.tracer)},
+        "live": {"tokens_per_s": tps_live, "wall_s": wall_live,
+                 "ring_capacity": live.tracer.capacity,
+                 "ring_events": len(live.tracer),
+                 "ring_dropped": live.tracer.dropped,
+                 "watchdog_fired": len(live.watchdog.fired),
+                 "costaudit_cells": len(live.costaudit.statusz()["cells"]),
+                 "streams_bit_identical": True},
         "overhead_frac": overhead,
-        "acceptance": "overhead_frac < 0.03",
+        "live_overhead_frac": overhead_live,
+        "acceptance": "overhead_frac < 0.03 and live_overhead_frac < 0.03",
     }
     path = pathlib.Path(out_path)
     path.write_text(json.dumps(payload, indent=2) + "\n")

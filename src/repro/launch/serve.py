@@ -18,6 +18,7 @@ length track its trailing acceptance rate.
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -102,6 +103,31 @@ def main(argv=None):
                          "written to DIR (TensorBoard/Perfetto-loadable); "
                          "also turns on TraceAnnotation scopes around the "
                          "jitted dispatches")
+    ap.add_argument("--statusz-port", type=int, default=None, metavar="PORT",
+                    help="serve the live telemetry plane on this port "
+                         "(0 = ephemeral, printed at startup): GET "
+                         "/metrics (Prometheus text), /statusz (live "
+                         "engine JSON), /debug/trace (flight-recorder "
+                         "dump as Chrome trace JSON)")
+    ap.add_argument("--status-linger", type=float, default=0.0, metavar="S",
+                    help="keep the status server (and process) up S "
+                         "seconds after generation finishes so the "
+                         "endpoints can be scraped post-run")
+    ap.add_argument("--trace-ring", type=int, default=0, metavar="N",
+                    help="record traces into a bounded drop-oldest ring of "
+                         "N events (the always-on flight recorder) instead "
+                         "of the unbounded post-hoc tracer")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="evaluate the anomaly watchdog every engine "
+                         "iteration (stall, TTFT/inter-token SLO, "
+                         "fragmentation spike, spec-acceptance and "
+                         "prefix-hit-rate collapse; see "
+                         "docs/observability.md for default thresholds)")
+    ap.add_argument("--postmortem-dir", default="", metavar="DIR",
+                    help="where watchdog firings write their postmortem "
+                         "bundles (ring dump + metrics snapshot + live "
+                         "state); empty = no bundles, the firing still "
+                         "traces and counts")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -115,8 +141,20 @@ def main(argv=None):
                        stochastic=not args.spec_no_stochastic,
                        adaptive_k=args.spec_adaptive_k)
             if args.spec_draft_rank else None)
-    tracer = obs.make_tracer(True) if args.trace_out else None
-    registry = obs.MetricsRegistry() if args.metrics_out else None
+    live_plane = args.statusz_port is not None or args.watchdog
+    if args.trace_ring:
+        tracer = obs.RingTracer(args.trace_ring)
+    elif args.trace_out:
+        tracer = obs.make_tracer(True)
+    elif live_plane:
+        # a live serve must stay bounded: flight-record by default
+        tracer = obs.RingTracer()
+    else:
+        tracer = None
+    registry = (obs.MetricsRegistry()
+                if args.metrics_out or live_plane else None)
+    watchdog = (obs.Watchdog(postmortem_dir=args.postmortem_dir or None)
+                if args.watchdog else None)
     engine = ElasticEngine(cfg, params_fact, table, infos,
                            max_batch=args.max_batch, max_len=args.max_len,
                            block_size=args.block_size,
@@ -126,7 +164,22 @@ def main(argv=None):
                            spec=spec,
                            device_sampling=not args.host_sampling,
                            prefix_cache=True if args.prefix_cache else None,
-                           tracer=tracer, registry=registry)
+                           tracer=tracer, registry=registry,
+                           watchdog=watchdog,
+                           costaudit=True if live_plane else None)
+    server = None
+    if args.statusz_port is not None:
+        # the ring recorder supports ?last_s=N windowed dumps; the plain
+        # post-hoc tracer always dumps everything it has
+        trace_fn = (tracer.dump if isinstance(tracer, obs.RingTracer)
+                    else lambda last_s=None: tracer.to_chrome())
+        server = obs.StatusServer(registry=registry,
+                                  status_fn=engine.statusz,
+                                  trace_fn=trace_fn,
+                                  port=args.statusz_port)
+        server.start()
+        print(f"# statusz: {server.url} "
+              f"(/metrics /statusz /debug/trace)", flush=True)
 
     budgets = [float(b) for b in args.budgets.split(",")]
     sampling = (SamplingParams(temperature=args.temperature,
@@ -185,6 +238,16 @@ def main(argv=None):
                   f"{s['spec_rounds']:.0f} rounds, "
                   f"acceptance {s['spec_acceptance_rate']:.2f}, "
                   f"mean accepted len {s['spec_mean_accepted_len']:.2f}")
+    if watchdog is not None:
+        for rec in watchdog.fired:
+            where = f" -> {rec['bundle']}" if rec["bundle"] else ""
+            print(f"# watchdog fired: {rec['rule']} — {rec['reason']}{where}")
+    if server is not None:
+        if args.status_linger > 0:
+            print(f"# statusz lingering {args.status_linger}s at "
+                  f"{server.url}", flush=True)
+            time.sleep(args.status_linger)
+        server.stop()
     return results
 
 

@@ -38,10 +38,16 @@ def _fmt(v: float) -> str:
     return repr(float(v))
 
 
+def _escape_label(v: str) -> str:
+    """Prometheus text-format label-value escaping: backslash, double
+    quote, and line feed must be escaped inside the quoted value."""
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
 def _label_str(labels: Tuple[Tuple[str, str], ...]) -> str:
     if not labels:
         return ""
-    inner = ",".join(f'{k}="{v}"' for k, v in labels)
+    inner = ",".join(f'{k}="{_escape_label(v)}"' for k, v in labels)
     return "{" + inner + "}"
 
 
@@ -114,17 +120,15 @@ class Histogram:
         return self.bounds[-1]
 
 
-_TYPES = {Counter: "counter", Gauge: "gauge", Histogram: "histogram"}
-
-
 class _Family:
     """One named metric family: children keyed by label tuples. The family
     itself proxies the unlabeled child so ``registry.counter("x").inc()``
     works without a ``labels()`` hop."""
 
-    def __init__(self, name: str, help_: str, factory):
+    def __init__(self, name: str, help_: str, factory, kind: str):
         self.name = name
         self.help = help_
+        self.kind = kind          # 'counter' | 'gauge' | 'histogram'
         self._factory = factory
         self._children: Dict[Tuple[Tuple[str, str], ...], object] = {}
 
@@ -133,7 +137,6 @@ class _Family:
         child = self._children.get(key)
         if child is None:
             child = self._children[key] = self._factory()
-            return child
         return child
 
     # unlabeled-child proxies
@@ -149,10 +152,6 @@ class _Family:
     def observe(self, v: float):
         return self.labels().observe(v)
 
-    @property
-    def kind(self) -> str:
-        return _TYPES[type(self._factory())]
-
     def children(self):
         return sorted(self._children.items())
 
@@ -163,21 +162,22 @@ class MetricsRegistry:
     def __init__(self):
         self._families: Dict[str, _Family] = {}
 
-    def _family(self, name: str, help_: str, factory) -> _Family:
+    def _family(self, name: str, help_: str, factory, kind: str) -> _Family:
         fam = self._families.get(name)
         if fam is None:
-            fam = self._families[name] = _Family(name, help_, factory)
+            fam = self._families[name] = _Family(name, help_, factory, kind)
         return fam
 
     def counter(self, name: str, help_: str = "") -> _Family:
-        return self._family(name, help_, Counter)
+        return self._family(name, help_, Counter, "counter")
 
     def gauge(self, name: str, help_: str = "") -> _Family:
-        return self._family(name, help_, Gauge)
+        return self._family(name, help_, Gauge, "gauge")
 
     def histogram(self, name: str, help_: str = "",
                   buckets: Sequence[float] = DEFAULT_TIME_BUCKETS) -> _Family:
-        return self._family(name, help_, lambda: Histogram(buckets))
+        return self._family(name, help_, lambda: Histogram(buckets),
+                            "histogram")
 
     # ---------------------------------------------------------- exposition
 

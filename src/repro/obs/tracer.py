@@ -91,27 +91,42 @@ class Tracer:
         return t - self._t0
 
     # -------------------------------------------------------------- emit
+    #
+    # Every emit takes ``self._lock``: the status server (obs/statusz.py)
+    # scrapes a live tracer from its own thread, so emit and export must
+    # not race on ``self._events``/``self._open``. The lock is uncontended
+    # in the single-threaded engine loop — one futex-free acquire per
+    # event on the enabled path, nothing at all on the NULL_TRACER path.
+
+    def _push(self, ev: Tuple) -> None:
+        """Append one event tuple; caller holds ``self._lock``. The ring
+        recorder (``obs/ringtrace.py``) overrides this to bound the
+        buffer and count drops."""
+        self._events.append(ev)
 
     def instant(self, name: str, cat: str = "", tid: int = ENGINE_TID,
                 args: Optional[dict] = None) -> None:
-        self._events.append(
-            ("i", name, cat, self._rel(self.now()), 0.0, tid, args))
+        ev = ("i", name, cat, self._rel(self.now()), 0.0, tid, args)
+        with self._lock:
+            self._push(ev)
 
     def begin(self, name: str, cat: str = "", tid: int = ENGINE_TID,
               args: Optional[dict] = None) -> None:
-        self._open.setdefault(tid, []).append(name)
-        self._events.append(
-            ("B", name, cat, self._rel(self.now()), 0.0, tid, args))
+        ev = ("B", name, cat, self._rel(self.now()), 0.0, tid, args)
+        with self._lock:
+            self._open.setdefault(tid, []).append(name)
+            self._push(ev)
 
     def end(self, name: str, tid: int = ENGINE_TID,
             args: Optional[dict] = None) -> None:
-        stack = self._open.get(tid, [])
-        assert stack and stack[-1] == name, (
-            f"span end {name!r} does not match open span "
-            f"{stack[-1] if stack else None!r} on tid {tid}")
-        stack.pop()
-        self._events.append(
-            ("E", name, "", self._rel(self.now()), 0.0, tid, args))
+        ev = ("E", name, "", self._rel(self.now()), 0.0, tid, args)
+        with self._lock:
+            stack = self._open.get(tid, [])
+            assert stack and stack[-1] == name, (
+                f"span end {name!r} does not match open span "
+                f"{stack[-1] if stack else None!r} on tid {tid}")
+            stack.pop()
+            self._push(ev)
 
     def span(self, name: str, cat: str = "", tid: int = ENGINE_TID,
              args: Optional[dict] = None):
@@ -123,22 +138,32 @@ class Tracer:
         """One finished span from caller-measured clock times (absolute
         ``self._clock`` readings) — lets code that already timed a phase
         emit it without extra clock reads."""
-        self._events.append(
-            ("X", name, cat, self._rel(t0), max(t1 - t0, 0.0), tid, args))
+        ev = ("X", name, cat, self._rel(t0), max(t1 - t0, 0.0), tid, args)
+        with self._lock:
+            self._push(ev)
 
     def counter(self, name: str, value: float, cat: str = "") -> None:
         """Counter-track sample (Perfetto renders these as line charts)."""
-        self._events.append(("C", name, cat, self._rel(self.now()), 0.0,
-                             ENGINE_TID, {"value": value}))
+        ev = ("C", name, cat, self._rel(self.now()), 0.0,
+              ENGINE_TID, {"value": value})
+        with self._lock:
+            self._push(ev)
 
     # ------------------------------------------------------------ export
 
     def __len__(self) -> int:
-        return len(self._events)
+        with self._lock:
+            return len(self._events)
+
+    def _snapshot(self) -> List[Tuple]:
+        """Consistent copy of the event buffer for export paths."""
+        with self._lock:
+            return list(self._events)
 
     def chrome_events(self) -> List[dict]:
+        events = self._snapshot()
         out = []
-        for ph, name, cat, ts, dur, tid, args in self._events:
+        for ph, name, cat, ts, dur, tid, args in events:
             ev = {"name": name, "ph": ph, "ts": round(ts * 1e6, 3),
                   "pid": 1, "tid": tid}
             if cat:
@@ -150,7 +175,7 @@ class Tracer:
             out.append(ev)
         # name the request tracks so Perfetto shows "req 3" instead of a
         # bare tid; metadata events sort first by convention
-        tids = sorted({e[5] for e in self._events})
+        tids = sorted({e[5] for e in events})
         meta = []
         for tid in tids:
             label = ("engine" if tid == ENGINE_TID
@@ -261,8 +286,10 @@ def make_tracer(enabled: Optional[bool] = None):
 def validate_chrome_trace(obj) -> List[str]:
     """Stdlib-only Chrome trace-event JSON validator. Returns a list of
     problems (empty = valid): top-level shape, required per-event fields,
-    known phases, non-negative timestamps/durations, and B/E nesting
-    balance per (pid, tid). Used by the schema tests and the CI smoke
+    known phases, non-negative timestamps/durations (including on ``M``
+    metadata events), and B/E nesting balance per (pid, tid) with the
+    ``E`` name checked against the matching ``B``. Used by the schema
+    tests and the CI smoke
     serve — NOT a full spec implementation, but strict enough that
     anything passing loads in Perfetto."""
     problems: List[str] = []
@@ -283,8 +310,12 @@ def validate_chrome_trace(obj) -> List[str]:
         for field in ("name", "pid", "tid"):
             if field not in ev:
                 problems.append(f"event {i}: missing {field!r}")
-        if not isinstance(ev.get("ts", 0), (int, float)) or ev.get("ts", 0) < 0:
-            problems.append(f"event {i}: bad ts {ev.get('ts')!r}")
+        # the ts check deliberately covers every phase, M metadata events
+        # included — Perfetto sorts metadata by ts, so a negative stamp
+        # there corrupts track naming just as badly as on a span
+        ts = ev.get("ts", 0)
+        if isinstance(ts, bool) or not isinstance(ts, (int, float)) or ts < 0:
+            problems.append(f"event {i}: bad ts {ts!r}")
         if ph == "X":
             dur = ev.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:
@@ -299,7 +330,11 @@ def validate_chrome_trace(obj) -> List[str]:
             if not stack:
                 problems.append(f"event {i}: E without open B on {key}")
             else:
-                stack.pop()
+                opened = stack.pop()
+                if ev.get("name", opened) != opened:
+                    problems.append(
+                        f"event {i}: E name {ev.get('name')!r} does not "
+                        f"match open B {opened!r} on {key}")
     for key, stack in stacks.items():
         if stack:
             problems.append(f"unclosed B events on {key}: {stack}")

@@ -97,6 +97,7 @@ class ElasticEngine:
                  device_sampling: Optional[bool] = None,
                  prefix_cache: Optional[bool] = None,
                  tracer=None, registry=None,
+                 watchdog=None, costaudit=None,
                  use_pallas=False):
         self.cfg = cfg
         self.params_fact = params_fact
@@ -173,6 +174,23 @@ class ElasticEngine:
             [FR.deployed_param_count(cfg, infos, table, k)
              for k in range(table.table.shape[0])], np.int64)
         self.router = BudgetRouter(self._cost_table)
+        # live telemetry plane (repro.obs): ``watchdog`` (a Watchdog) is
+        # ticked once per engine iteration with the loop's heartbeat
+        # signals and captures a postmortem bundle when a rule fires;
+        # ``costaudit`` accumulates measured dispatch seconds per
+        # (row, batch-bucket) against the analytic cost model — pass an
+        # instance, or True to build one against this engine's cost table
+        self.watchdog = watchdog
+        if costaudit is True:
+            from repro.obs import CostModelAudit
+            costaudit = CostModelAudit(cfg, self._cost_table,
+                                       max_len=max_len, registry=registry)
+        self.costaudit = costaudit
+        # live-state handle for ``statusz()``: the serving loops park their
+        # local scheduler/cache/batcher here so the status server can
+        # snapshot them from its own thread mid-run
+        self._live: Dict[str, object] = {}
+        self._iterations = 0
         self.last_metrics: Optional[ServingMetrics] = None
         self._decode_jit = jax.jit(
             lambda p, st, tok: tfm.decode_step(p, self.cfg, st, tok))
@@ -265,6 +283,13 @@ class ElasticEngine:
                                             registry=self.registry)
         self.last_metrics = metrics
         sched = Scheduler(self.router, tracer=self.tracer)
+        self._live = {"sched": sched, "metrics": metrics}
+        if self.watchdog is not None:
+            self.watchdog.bind(
+                tracer=self.tracer,
+                trace_fn=(self.tracer.to_chrome if self.tracer.enabled
+                          else None),
+                state_fn=self.statusz, registry=self.registry)
         submitted = []
         for r in requests:
             if len(r.prompt) == 0:
@@ -349,6 +374,95 @@ class ElasticEngine:
             if seq is not None and seq.state == "decoding":
                 cache.append_token(slot)
 
+    # -------------------------------------------- live telemetry plane
+
+    def _watchdog_tick(self, metrics: ServingMetrics, cache,
+                       *, decoding: bool) -> None:
+        """One per-iteration watchdog evaluation with the loop's cheap
+        heartbeat signals (see obs/watchdog.py for the rules)."""
+        self.watchdog.tick(
+            progress_tokens=metrics.generated_tokens + metrics.prefill_tokens,
+            decode_tokens=metrics.generated_tokens,
+            decoding=decoding,
+            metrics=metrics,
+            fragmentation=cache.allocator.fragmentation(),
+            free_blocks=cache.allocator.free_count,
+            spec_accept_ewma=metrics.accept_ewma,
+            spec_rounds=metrics.spec_rounds,
+            prefix_stats=cache.stats if cache.prefix_cache else None)
+
+    def statusz(self) -> dict:
+        """Live engine snapshot for the ``/statusz`` endpoint and the
+        watchdog's postmortem ``state.json``: per-request lifecycle
+        states, per-row queue depths, KV occupancy/fragmentation, prefix
+        cache hit rate, and adaptive-k state. Built to be called from the
+        status-server thread while the engine runs — live structures are
+        read best-effort (list-copied before iteration; any race that
+        still slips through marks the snapshot ``partial`` instead of
+        failing the scrape)."""
+        out: Dict[str, object] = {
+            "engine": {
+                "arch": self.cfg.name,
+                "max_batch": self.max_batch, "max_len": self.max_len,
+                "block_size": self.block_size,
+                "prefill_chunk": self.prefill_chunk,
+                "token_budget": self.token_budget,
+                "device_sampling": self.device_sampling,
+                "prefix_cache": self.prefix_cache,
+                "rows": len(self._cost_table),
+                "row_params": self._cost_table.tolist(),
+                "spec": None if self.spec is None else {
+                    "draft_rank": self.spec.draft_rank,
+                    "spec_len": self.spec.spec_len,
+                    "adaptive_k": self.spec.adaptive_k},
+            },
+            "iterations": self._iterations,
+        }
+        try:
+            live = dict(self._live)
+            metrics = live.get("metrics") or self.last_metrics
+            if metrics is not None:
+                reqs = {}
+                for req_id, tr in list(metrics.traces.items()):
+                    state = ("finished" if tr.finish_t is not None
+                             else "decoding" if tr.first_token_t is not None
+                             else "prefilling" if tr.admit_t is not None
+                             else "waiting")
+                    reqs[req_id] = {
+                        "state": state, "new_tokens": tr.new_tokens,
+                        "preemptions": tr.preemptions,
+                        "prefix_hit_tokens": tr.prefix_hit_tokens,
+                        "ttft_s": tr.ttft}
+                out["requests"] = reqs
+                out["progress"] = {
+                    "generated_tokens": metrics.generated_tokens,
+                    "prefill_tokens": metrics.prefill_tokens,
+                    "preemptions": metrics.preemptions,
+                    "spec_rounds": metrics.spec_rounds,
+                    "spec_accept_ewma": metrics.accept_ewma}
+            sched = live.get("sched")
+            if sched is not None:
+                out["queues"] = {row: len(q)
+                                 for row, q in list(sched.queues.items())}
+            cache = live.get("cache")
+            if cache is not None:
+                out["serving_row"] = live.get("row")
+                out["speculating"] = live.get("spec")
+                out["kv"] = cache.statusz()
+            batcher = live.get("batcher")
+            if batcher is not None:
+                out["adaptive_k"] = {
+                    s.req_id: {"k": s.spec_k,
+                               "accept_ewma": s.spec_accept_ewma}
+                    for s in list(batcher.active_sequences())}
+        except Exception as e:       # racing the engine thread; keep what
+            out["partial"] = repr(e)  # rendered and say so
+        if self.watchdog is not None:
+            out["watchdog"] = self.watchdog.statusz()
+        if self.costaudit is not None:
+            out["costaudit"] = self.costaudit.statusz()
+        return out
+
     # ------------------------------ chunked prefill / mixed iterations
 
     def _bucket_tokens(self, used: int, budget: Optional[int] = None) -> int:
@@ -384,6 +498,7 @@ class ElasticEngine:
                              prefix_cache=self.prefix_cache)
         cache.tracer = self.tracer
         batcher = ContinuousBatcher(self.max_batch)
+        self._live.update(row=row, cache=cache, batcher=batcher, spec=False)
         tr = self.tracer
 
         while True:
@@ -534,6 +649,15 @@ class ElasticEngine:
                                        prefix=cache.stats)
                 metrics.on_queue_depths(
                     {r: len(q) for r, q in sched.queues.items()})
+            self._iterations += 1
+            if self.costaudit is not None:
+                self.costaudit.observe(
+                    row,
+                    self._bucket_tokens(len(decode_slots) + total_chunk),
+                    disp_s)
+            if self.watchdog is not None:
+                self._watchdog_tick(metrics, cache,
+                                    decoding=bool(decode_slots))
 
     @staticmethod
     def _pack_flat(entries, width: int, null_slot: int):

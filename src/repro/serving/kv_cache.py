@@ -729,3 +729,30 @@ class PagedKVCache:
     def occupancy(self) -> float:
         used = self.allocator.num_blocks - 1 - self.allocator.free_count
         return used / (self.allocator.num_blocks - 1)
+
+    def statusz(self) -> dict:
+        """JSON-able live snapshot for the ``/statusz`` endpoint: block
+        occupancy/fragmentation, prefix-cache counters + hit rate, and
+        per-slot block holdings. Read-only and cheap — safe to call from
+        the status server thread while the engine mutates the cache (a
+        torn read can misreport a count for one scrape, never corrupt)."""
+        alloc = self.allocator
+        st = self.stats
+        probes = st.hits + st.misses
+        return {
+            "num_blocks": alloc.num_blocks - 1,          # usable (non-null)
+            "block_size": self.block_size,
+            "free_blocks": alloc.free_count,
+            "occupancy": self.occupancy(),
+            "fragmentation": alloc.fragmentation(),
+            "prefix_cache": {
+                "enabled": self.prefix_cache,
+                "cached_blocks": self.cached_blocks,
+                "hit_rate": st.hits / probes if probes else None,
+                **dataclasses.asdict(st),
+            },
+            "slots": {
+                i: {"tokens": s.num_tokens, "blocks": len(s.blocks)}
+                for i, s in enumerate(self.slots) if s is not None
+            },
+        }

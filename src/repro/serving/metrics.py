@@ -159,6 +159,10 @@ class ServingMetrics:
         self.traces: Dict[int, RequestTrace] = {}
         self.decode_steps = 0
         self.prefill_tokens = 0
+        # cumulative generated tokens across all requests — the engine's
+        # heartbeat: the watchdog's no-progress stall and inter-token SLO
+        # rules key off this advancing (see obs/watchdog.py)
+        self.generated_tokens = 0
         self.preemptions = 0
         self.occupancy_samples: List[float] = []
         # one (decode_tokens, prefill_tokens) pair per mixed iteration —
@@ -241,6 +245,7 @@ class ServingMetrics:
                                        parts):
                         self._m_ttft_part.labels(part=part).observe(v)
         tr.new_tokens += 1
+        self.generated_tokens += 1
         self.prefill_tokens += prefill_tokens
         if self.registry is not None:
             self._m_tokens.inc()
@@ -344,8 +349,19 @@ class ServingMetrics:
 
     def on_token(self, req_id: int) -> None:
         self.traces[req_id].new_tokens += 1
+        self.generated_tokens += 1
         if self.registry is not None:
             self._m_tokens.inc()
+
+    @property
+    def accept_ewma(self) -> Optional[float]:
+        """Trailing speculative acceptance-rate EWMA (None before any
+        speculative round) — the watchdog's collapse signal."""
+        return self._accept_ewma
+
+    @property
+    def spec_rounds(self) -> int:
+        return len(self.spec_round_log)
 
     def on_preempt(self, req_id: int) -> None:
         self.preemptions += 1

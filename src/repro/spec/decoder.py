@@ -235,6 +235,8 @@ class SpecDecoder:
 
     def serve(self) -> None:
         eng, sched, tr = self.engine, self.sched, self.tracer
+        eng._live.update(row=self.row, cache=self.cache,
+                         batcher=self.batcher, spec=True)
         while True:
             it0 = self.metrics.now()
             self._disp_s = 0.0
@@ -315,6 +317,14 @@ class SpecDecoder:
                     prefix=self.cache.stats)
                 self.metrics.on_queue_depths(
                     {r: len(q) for r, q in sched.queues.items()})
+            # live telemetry heartbeat: speculative rounds tick the
+            # watchdog like mixed iterations (the cost audit skips them —
+            # a round interleaves draft- and verify-row dispatches, so
+            # there is no clean per-row attribution; see obs/costaudit.py)
+            eng._iterations += 1
+            if eng.watchdog is not None:
+                eng._watchdog_tick(self.metrics, self.cache,
+                                   decoding=bool(self.batcher.decode_slots()))
 
     # ----------------------------------------------------------- planning
 

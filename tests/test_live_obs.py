@@ -1,0 +1,491 @@
+"""Live telemetry plane suite: ring-buffer flight recorder semantics
+(drop-oldest under overflow, windowed dumps, mid-run B/E balancing),
+tracer emit/export thread-safety, the /statusz status server (all three
+endpoints, schema + monotonic counters while an engine is generating),
+the anomaly watchdog (every rule via injected clocks; postmortem bundles
+that validate), and the cost-model audit."""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.obs import (CostModelAudit, MetricsRegistry, RingTracer,
+                       StatusServer, Tracer, Watchdog,
+                       validate_chrome_trace)
+from repro.serving import ElasticEngine, Request
+
+
+# ----------------------------------------------------- ring flight recorder
+
+def test_ring_drop_oldest_under_overflow():
+    tr = RingTracer(capacity=4, clock=iter(map(float, range(20))).__next__)
+    for i in range(9):
+        tr.instant(f"e{i}")
+    assert len(tr) == 4 and tr.dropped == 5
+    names = [e["name"] for e in tr.chrome_events() if e["ph"] == "i"]
+    assert names == ["e5", "e6", "e7", "e8"]     # oldest evicted first
+    d = tr.dump()
+    assert validate_chrome_trace(d) == []
+    assert d["ring"]["capacity"] == 4 and d["ring"]["dropped"] == 5
+
+
+def test_ring_never_drops_below_capacity():
+    tr = RingTracer(capacity=100)
+    for i in range(100):
+        tr.instant(f"e{i}")
+    assert len(tr) == 100 and tr.dropped == 0
+
+
+def test_ring_windowed_dump():
+    # events at t=1..6s (t0=0); a 2.5s window keeps only the last three
+    tr = RingTracer(capacity=64,
+                    clock=iter([0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).__next__)
+    for i in range(6):
+        tr.instant(f"e{i}")
+    d = tr.dump(last_s=2.5)
+    names = [e["name"] for e in d["traceEvents"] if e["ph"] == "i"]
+    assert names == ["e3", "e4", "e5"]
+    assert validate_chrome_trace(d) == []
+    full = tr.dump()
+    assert len([e for e in full["traceEvents"] if e["ph"] == "i"]) == 6
+
+
+def test_ring_dump_balances_open_and_orphaned_spans():
+    tr = RingTracer(capacity=4)
+    tr.begin("span_a")         # will be evicted -> its E becomes an orphan
+    tr.instant("x1")
+    tr.instant("x2")
+    tr.instant("x3")
+    tr.end("span_a")           # evicts the B of span_a
+    tr.begin("span_b")         # still open at dump time
+    d = tr.dump()
+    assert validate_chrome_trace(d) == []
+    phases = {e["ph"] for e in d["traceEvents"]}
+    assert "B" not in phases and "E" not in phases
+    # the raw buffer still holds the unbalanced tuples (capacity-bounded)
+    assert len(tr) == 4 and tr.dropped == 2
+
+
+def test_ring_to_chrome_and_export_are_dump(tmp_path):
+    tr = RingTracer(capacity=8)
+    tr.instant("a")
+    assert tr.to_chrome()["ring"]["capacity"] == 8
+    p = tmp_path / "ring.json"
+    tr.export_chrome(p)
+    d = json.loads(p.read_text())
+    assert validate_chrome_trace(d) == [] and d["ring"]["events"] >= 1
+
+
+def test_ring_rejects_nonpositive_capacity():
+    with pytest.raises(AssertionError):
+        RingTracer(capacity=0)
+
+
+# -------------------------------------------------- tracer thread-safety
+
+@pytest.mark.parametrize("mk", [Tracer, lambda: RingTracer(capacity=512)],
+                         ids=["tracer", "ring"])
+def test_concurrent_emit_and_export(mk):
+    """Satellite: emit from several threads while another exports — no
+    torn reads, no lost events (ring: no lost accounting)."""
+    tr = mk()
+    N_THREADS, N_EVENTS = 4, 200
+    errors = []
+
+    def emitter(t):
+        try:
+            for i in range(N_EVENTS):
+                tr.instant(f"t{t}e{i}", tid=t + 1)
+                t0 = tr.now()
+                tr.complete(f"t{t}x{i}", "cat", t0, t0 + 1e-3, tid=t + 1)
+        except Exception as e:                      # pragma: no cover
+            errors.append(e)
+
+    stop = threading.Event()
+
+    def exporter():
+        try:
+            while not stop.is_set():
+                evs = tr.chrome_events()
+                assert isinstance(evs, list)
+                len(tr)
+        except Exception as e:                      # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=emitter, args=(t,))
+               for t in range(N_THREADS)]
+    exp = threading.Thread(target=exporter)
+    exp.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    exp.join()
+    assert not errors
+    total = N_THREADS * N_EVENTS * 2
+    if isinstance(tr, RingTracer):
+        assert len(tr) + tr.dropped == total
+    else:
+        assert len(tr) == total
+    assert validate_chrome_trace(tr.to_chrome()) == []
+
+
+# --------------------------------------------------------- status server
+
+def _get(url, timeout=5.0):
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.status, r.read().decode()
+
+
+def test_status_server_endpoints():
+    reg = MetricsRegistry()
+    reg.counter("demo_total", "a demo counter").inc(3)
+    ring = RingTracer(capacity=16)
+    ring.instant("hello")
+    srv = StatusServer(registry=reg, status_fn=lambda: {"alive": True},
+                       trace_fn=ring.dump)
+    with srv:
+        base = srv.url
+        code, body = _get(base + "/")
+        assert code == 200 and "/metrics" in body
+        code, body = _get(base + "/metrics")
+        assert code == 200
+        assert "# TYPE demo_total counter" in body
+        assert "demo_total 3" in body
+        code, body = _get(base + "/statusz")
+        assert code == 200 and json.loads(body) == {"alive": True}
+        code, body = _get(base + "/debug/trace")
+        d = json.loads(body)
+        assert validate_chrome_trace(d) == []
+        assert d["ring"]["capacity"] == 16
+        code, body = _get(base + "/debug/trace?last_s=10")
+        assert validate_chrome_trace(json.loads(body)) == []
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(base + "/nope")
+        assert ei.value.code == 404
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(base + "/debug/trace?last_s=bogus")
+        assert ei.value.code == 400
+
+
+def test_status_server_unbound_sources_404():
+    srv = StatusServer()
+    with srv:
+        for path in ("/metrics", "/statusz", "/debug/trace"):
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                _get(srv.url + path)
+            assert ei.value.code == 404
+
+
+def test_status_server_callback_error_is_500():
+    def boom():
+        raise RuntimeError("scrape raced the engine")
+    srv = StatusServer(status_fn=boom)
+    with srv:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(srv.url + "/statusz")
+        assert ei.value.code == 500
+        assert "scrape raced the engine" in ei.value.read().decode()
+
+
+# ------------------------------------------------------------- watchdog
+
+def _clock(script):
+    it = iter(map(float, script))
+    return it.__next__
+
+
+def test_watchdog_stall_rule():
+    wd = Watchdog(stall_s=5.0, ttft_slo_s=None, intertoken_slo_s=None,
+                  clock=_clock([0.0, 3.0, 6.0]))
+    assert wd.tick(progress_tokens=10) == []          # t=0: baseline
+    assert wd.tick(progress_tokens=10) == []          # t=3: under threshold
+    assert wd.tick(progress_tokens=10) == ["stall"]   # t=6: 6s no progress
+    assert "no committed token for 6.00s" in wd.fired[0]["reason"]
+
+
+def test_watchdog_progress_rearms_stall():
+    wd = Watchdog(stall_s=5.0, ttft_slo_s=None, intertoken_slo_s=None,
+                  clock=_clock([0.0, 6.0, 7.0]))
+    wd.tick(progress_tokens=1)
+    assert wd.tick(progress_tokens=2) == []   # progress at t=6: no stall
+    assert wd.tick(progress_tokens=2) == []   # only 1s since progress
+
+
+def test_watchdog_intertoken_slo():
+    wd = Watchdog(stall_s=100.0, ttft_slo_s=None, intertoken_slo_s=2.0,
+                  clock=_clock([0.0, 3.0, 6.0]))
+    wd.tick(progress_tokens=5, decode_tokens=5, decoding=True)
+    # prefill progress continues (stall quiet) but decode is frozen
+    assert wd.tick(progress_tokens=8, decode_tokens=5,
+                   decoding=True) == ["intertoken_slo"]
+    # not decoding -> rule is quiet even though decode count is frozen
+    assert wd.tick(progress_tokens=9, decode_tokens=5, decoding=False) == []
+
+
+def test_watchdog_ttft_slo_names_request():
+    class _Tr:
+        def __init__(self, submit_t):
+            self.submit_t = submit_t
+            self.first_token_t = None
+            self.finish_t = None
+
+    class _M:
+        traces = {7: _Tr(submit_t=0.0)}
+
+    wd = Watchdog(stall_s=100.0, ttft_slo_s=2.0, intertoken_slo_s=None,
+                  clock=_clock([5.0]))
+    assert wd.tick(progress_tokens=1, metrics=_M()) == ["ttft_slo"]
+    assert "request 7" in wd.fired[0]["reason"]
+
+
+def test_watchdog_fragmentation_rule():
+    wd = Watchdog(frag_threshold=0.5, frag_min_free=4, stall_s=100.0,
+                  ttft_slo_s=None, clock=_clock([0.0, 1.0, 2.0]))
+    wd.tick(progress_tokens=0)
+    assert wd.tick(progress_tokens=1, fragmentation=0.9,
+                   free_blocks=2) == []                 # too few free blocks
+    assert wd.tick(progress_tokens=2, fragmentation=0.9,
+                   free_blocks=8) == ["fragmentation"]
+
+
+def test_watchdog_collapse_rules():
+    wd = Watchdog(accept_floor=0.2, accept_min_rounds=3,
+                  prefix_hit_floor=0.5, prefix_min_probes=4,
+                  stall_s=100.0, ttft_slo_s=None,
+                  clock=_clock([0.0, 1.0, 2.0, 3.0]))
+    from repro.serving.kv_cache import PrefixCacheStats
+    wd.tick(progress_tokens=0)
+    # below min rounds / probes: quiet
+    assert wd.tick(progress_tokens=1, spec_accept_ewma=0.05, spec_rounds=2,
+                   prefix_stats=PrefixCacheStats(hits=0, misses=3)) == []
+    fired = wd.tick(progress_tokens=2, spec_accept_ewma=0.05, spec_rounds=5,
+                    prefix_stats=PrefixCacheStats(hits=1, misses=9))
+    assert fired == ["spec_accept_collapse", "prefix_hit_collapse"]
+
+
+def test_watchdog_refire_cooldown():
+    wd = Watchdog(stall_s=1.0, ttft_slo_s=None, intertoken_slo_s=None,
+                  refire_s=10.0, clock=_clock([0.0, 2.0, 4.0, 13.0]))
+    wd.tick(progress_tokens=0)
+    assert wd.tick(progress_tokens=0) == ["stall"]     # t=2
+    assert wd.tick(progress_tokens=0) == []            # t=4: cooling down
+    assert wd.tick(progress_tokens=0) == ["stall"]     # t=13: re-armed
+    assert len(wd.fired) == 2
+
+
+def test_watchdog_stall_postmortem_bundle_validates(tmp_path):
+    """Acceptance: an injected-clock stall writes a bundle naming the
+    firing rule whose ring dump validates and whose state snapshot
+    parses."""
+    ring = RingTracer(capacity=64)
+    ring.begin("iteration")            # open span: dump must still validate
+    ring.instant("plan")
+    reg = MetricsRegistry()
+    reg.counter("repro_generated_tokens_total", "tokens").inc(42)
+    wd = Watchdog(stall_s=5.0, ttft_slo_s=None, intertoken_slo_s=None,
+                  postmortem_dir=str(tmp_path),
+                  clock=_clock([0.0, 6.0]))
+    wd.bind(tracer=ring, trace_fn=ring.dump,
+            state_fn=lambda: {"queues": {0: 3}, "iterations": 17},
+            registry=reg)
+    wd.tick(progress_tokens=4)
+    assert wd.tick(progress_tokens=4) == ["stall"]
+
+    (rec,) = wd.fired
+    bundle = rec["bundle"]
+    assert bundle is not None and "stall" in bundle
+    reason = json.loads((tmp_path / f"{bundle.split('/')[-1]}" /
+                         "reason.json").read_text())
+    assert reason["rule"] == "stall"
+    trace = json.loads(open(f"{bundle}/trace.json").read())
+    assert validate_chrome_trace(trace) == []
+    state = json.loads(open(f"{bundle}/state.json").read())
+    assert state["iterations"] == 17
+    prom = open(f"{bundle}/metrics.prom").read()
+    assert "repro_generated_tokens_total 42" in prom
+    snap = json.loads(open(f"{bundle}/metrics.json").read())
+    assert snap["repro_generated_tokens_total"] == 42
+    # the firing also traced a watchdog instant into the ring
+    names = {e["name"] for e in ring.dump()["traceEvents"]}
+    assert "watchdog" in names
+
+
+def test_watchdog_without_postmortem_dir_still_records():
+    wd = Watchdog(stall_s=1.0, ttft_slo_s=None, clock=_clock([0.0, 2.0]))
+    wd.tick(progress_tokens=0)
+    assert wd.tick(progress_tokens=0) == ["stall"]
+    assert wd.fired[0]["bundle"] is None
+    assert json.dumps(wd.statusz())    # JSON-able panel
+
+
+# ----------------------------------------------------------- cost audit
+
+@pytest.fixture(scope="module")
+def smoke_state():
+    from repro.data import make_source
+    from repro.launch.train import build_flexrank_state
+    from repro.models import common as cm
+    from repro.models import transformer as tfm
+    cfg = get_config("gpt2-small", smoke=True)
+    source = make_source(cfg.vocab_size, 64, 4, seed=0)
+    dense = cm.instantiate(tfm.model_spec(cfg), jax.random.PRNGKey(0))
+    params_fact, table, infos = build_flexrank_state(cfg, dense, source)
+    return cfg, params_fact, table, infos
+
+
+def _mk_engine(state, **kw):
+    cfg, params_fact, table, infos = state
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("block_size", 8)
+    return ElasticEngine(cfg, params_fact, table, infos, **kw)
+
+
+def _requests(cfg, spec, seed=7):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, pl).astype(np.int32),
+                    max_new_tokens=mn, budget=b) for pl, mn, b in spec]
+
+
+def test_costaudit_predictions_and_ratios(smoke_state):
+    cfg = smoke_state[0]
+    reg = MetricsRegistry()
+    audit = CostModelAudit(cfg, np.array([50_000, 100_000]), max_len=64,
+                           registry=reg)
+    # a full-rank row predicts more bytes than a half-rank row (params
+    # term scales by the deployed fraction), and wider buckets cost more
+    assert audit.predicted_bytes(1, 8) > audit.predicted_bytes(0, 8)
+    assert audit.predicted_bytes(0, 32) > audit.predicted_bytes(0, 8)
+
+    audit.observe(0, 8, 0.010)
+    audit.observe(0, 8, 0.012)
+    audit.observe(1, 8, 0.030)
+    ratios = audit.error_ratios()
+    assert set(ratios) == {(0, 8), (1, 8)}
+    # calibration is relative: the median implied bandwidth makes ratios
+    # straddle 1 — here row 1 is slower than its byte count explains
+    assert ratios[(1, 8)] > 1.0 > ratios[(0, 8)]
+    prom = reg.prometheus_text()
+    assert "repro_costmodel_error_ratio" in prom
+    assert 'row="1"' in prom
+    table = audit.statusz()
+    assert table["bandwidth_gb_per_s"] > 0
+    assert len(table["cells"]) == 2
+    assert json.dumps(table)
+
+
+def test_costaudit_empty_is_quiet(smoke_state):
+    audit = CostModelAudit(smoke_state[0], np.array([100]), max_len=64)
+    assert audit.bandwidth() is None and audit.error_ratios() == {}
+    assert audit.statusz() == {"bandwidth_gb_per_s": None, "cells": []}
+
+
+# ----------------------------------------- engine integration (live plane)
+
+def _parse_prom(text, name):
+    for line in text.splitlines():
+        if line.startswith(name + " ") or line.startswith(name + "{"):
+            return float(line.rsplit(" ", 1)[1])
+    return None
+
+
+def test_live_scrape_during_generation(smoke_state):
+    """Acceptance: /metrics + /statusz + /debug/trace all answer while the
+    engine generates; Prometheus counters are monotonic across scrapes and
+    the trace dump validates every time."""
+    cfg = smoke_state[0]
+    ring = RingTracer(capacity=4096)
+    reg = MetricsRegistry()
+    eng = _mk_engine(smoke_state, prefill_chunk=8, tracer=ring,
+                     registry=reg, costaudit=True)
+    srv = StatusServer(registry=reg, status_fn=eng.statusz,
+                       trace_fn=ring.dump)
+    reqs = _requests(cfg, [(9, 8, 1.0), (7, 6, 0.4), (12, 6, 1.0),
+                           (10, 6, 0.7)])
+    box = {}
+
+    def run():
+        box["results"] = eng.generate(reqs, mode="continuous")
+
+    worker = threading.Thread(target=run)
+    with srv:
+        worker.start()
+        seen_tokens, scrapes = [], 0
+        while worker.is_alive():
+            code, prom = _get(srv.url + "/metrics")
+            assert code == 200
+            v = _parse_prom(prom, "repro_generated_tokens_total")
+            if v is not None:
+                seen_tokens.append(v)
+            code, body = _get(srv.url + "/statusz")
+            status = json.loads(body)
+            assert status["engine"]["arch"] == cfg.name
+            assert "iterations" in status
+            code, body = _get(srv.url + "/debug/trace")
+            assert validate_chrome_trace(json.loads(body)) == []
+            scrapes += 1
+            time.sleep(0.05)
+        worker.join()
+    assert scrapes > 0
+    assert len(box["results"]) == len(reqs)
+    # monotonic counter across concurrent scrapes
+    assert seen_tokens == sorted(seen_tokens)
+    # post-run: the final snapshot reflects the finished stream
+    final = eng.statusz()
+    assert json.dumps(final)                       # JSON-able end to end
+    states = {r["state"] for r in final["requests"].values()}
+    assert states == {"finished"}
+    assert final["progress"]["generated_tokens"] == sum(
+        len(r.tokens) for r in box["results"]) - sum(
+        len(r.prompt) for r in reqs)
+    assert final["costaudit"]["cells"], "cost audit saw no iterations"
+    prom = reg.prometheus_text()
+    assert "repro_costmodel_error_ratio" in prom
+
+
+def test_engine_watchdog_fires_ttft_slo_live(smoke_state, tmp_path):
+    """A live serve with an impossible TTFT SLO fires the watchdog and
+    writes a bundle naming the rule."""
+    cfg = smoke_state[0]
+    ring = RingTracer(capacity=4096)
+    reg = MetricsRegistry()
+    wd = Watchdog(ttft_slo_s=1e-9, stall_s=1e9, intertoken_slo_s=None,
+                  postmortem_dir=str(tmp_path))
+    eng = _mk_engine(smoke_state, prefill_chunk=8, tracer=ring,
+                     registry=reg, watchdog=wd)
+    eng.generate(_requests(cfg, [(9, 3, 1.0), (7, 3, 0.4)]),
+                 mode="continuous")
+    assert any(r["rule"] == "ttft_slo" for r in wd.fired)
+    (bundle,) = [r["bundle"] for r in wd.fired if r["rule"] == "ttft_slo"]
+    trace = json.loads(open(f"{bundle}/trace.json").read())
+    assert validate_chrome_trace(trace) == []
+    state = json.loads(open(f"{bundle}/state.json").read())
+    assert state["engine"]["arch"] == cfg.name
+    assert "requests" in state
+    prom = open(f"{bundle}/metrics.prom").read()
+    assert 'repro_watchdog_fired_total{rule="ttft_slo"}' in prom
+
+
+def test_engine_telemetry_does_not_change_streams(smoke_state):
+    """Bit-identical guarantee: the full live plane (ring + watchdog +
+    cost audit + registry) must not touch sampling."""
+    cfg = smoke_state[0]
+    spec = [(9, 6, 1.0), (7, 5, 0.4), (12, 4, 0.7)]
+    eng_off = _mk_engine(smoke_state, prefill_chunk=8)
+    base = eng_off.generate(_requests(cfg, spec), mode="continuous")
+    wd = Watchdog(stall_s=1e9, ttft_slo_s=None, intertoken_slo_s=None)
+    eng_on = _mk_engine(smoke_state, prefill_chunk=8,
+                        tracer=RingTracer(capacity=256),
+                        registry=MetricsRegistry(), watchdog=wd,
+                        costaudit=True)
+    live = eng_on.generate(_requests(cfg, spec), mode="continuous")
+    for a, b in zip(base, live):
+        assert np.array_equal(a.tokens, b.tokens)

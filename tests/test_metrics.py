@@ -155,3 +155,28 @@ def test_registry_sees_preemption_and_delivered_tokens():
     assert m.traces[0].new_tokens == 1
     # TTFT histogram observed once per delivering attempt
     assert snap["repro_ttft_seconds_count"] == 2
+
+
+def test_prometheus_label_values_are_escaped():
+    reg = MetricsRegistry()
+    reg.counter("odd_total", "labels with format-hostile values").labels(
+        path='a"b', note="line1\nline2", win="c:\\tmp").inc()
+    text = reg.prometheus_text()
+    assert 'path="a\\"b"' in text
+    assert 'note="line1\\nline2"' in text
+    assert 'win="c:\\\\tmp"' in text
+    # still a single sample line: the newline was escaped, not emitted
+    samples = [l for l in text.splitlines() if l.startswith("odd_total")]
+    assert len(samples) == 1 and samples[0].endswith(" 1.0")
+
+
+def test_family_kind_fixed_without_child_construction():
+    reg = MetricsRegistry()
+    built = []
+    fam = reg._family("probe_total", "", lambda: built.append(1) or None,
+                      "counter")
+    assert fam.kind == "counter"     # known before any child exists
+    assert built == []               # deciding the kind built nothing
+    # empty families are skipped by exposition without probing the factory
+    assert "probe_total" not in reg.prometheus_text()
+    assert built == []

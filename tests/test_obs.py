@@ -126,6 +126,15 @@ def test_validator_accepts_minimal_trace():
                        "tid": 0}]}, "E without open B"),
     ({"traceEvents": [{"name": "a", "ph": "B", "ts": 0, "pid": 1,
                        "tid": 0}]}, "unclosed B"),
+    # an E that closes a differently-named B is a corrupt span pair
+    ({"traceEvents": [{"name": "a", "ph": "B", "ts": 0, "pid": 1, "tid": 0},
+                      {"name": "b", "ph": "E", "ts": 1, "pid": 1,
+                       "tid": 0}]}, "does not match open B"),
+    # metadata events are sorted by ts too — negative stamps corrupt them
+    ({"traceEvents": [{"name": "thread_name", "ph": "M", "ts": -5, "pid": 1,
+                       "tid": 0, "args": {"name": "x"}}]}, "bad ts"),
+    ({"traceEvents": [{"name": "a", "ph": "i", "ts": True, "pid": 1,
+                       "tid": 0}]}, "bad ts"),
     ({"events": []}, "traceEvents"),
 ])
 def test_validator_rejects(bad, needle):
