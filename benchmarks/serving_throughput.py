@@ -57,6 +57,7 @@ continuous workload to ``benchmarks/traces/`` (Perfetto-loadable).
 """
 import argparse
 import json
+import os
 import pathlib
 import time
 
@@ -434,6 +435,147 @@ def prefix_sweep(out_path="benchmarks/BENCH_prefix.json", reps=5):
     print(f"# wrote {path}")
 
 
+def _saturation_leg(engine, reqs):
+    """Serve ``reqs`` through the asyncio streaming front door, all
+    submitted at t=0 (saturation). Returns per-request generated-token
+    lists, client-side inter-token gaps, the wall, and the metrics."""
+    import asyncio
+    import threading
+
+    from repro.serving.session import StreamSession
+
+    async def drive():
+        session = StreamSession(stream_buffer=64)
+        session.loop = asyncio.get_running_loop()
+        worker = threading.Thread(target=engine.serve_session,
+                                  args=(session,))
+        worker.start()
+
+        async def client(rq):
+            h = session.submit(rq)
+            toks, stamps = [], []
+            async for tok in h.tokens():
+                stamps.append(time.perf_counter())
+                toks.append(tok)
+            await h.wait_result()
+            return toks, stamps
+
+        outs = await asyncio.gather(*[client(r) for r in reqs])
+        session.close()
+        await session.join()
+        worker.join()
+        return outs
+
+    t0 = time.perf_counter()
+    outs = asyncio.run(drive())
+    wall = time.perf_counter() - t0
+    streams = [toks for toks, _ in outs]
+    itls = [b - a for _, stamps in outs
+            for a, b in zip(stamps, stamps[1:])]
+    return streams, itls, wall, engine.last_metrics
+
+
+def saturation(out_path="benchmarks/BENCH_async.json", delay_s=None):
+    """One-iteration lookahead vs the synchronous engine at saturation,
+    through the streaming front door (PR acceptance: >= 1.15x tokens/s in
+    the dispatch-gap-bound regime, token streams bit-identical).
+
+    This box is 1-core CPU-only, so a real forward cannot make progress
+    while the host plans — the regime lookahead targets (device iteration
+    outlasting the host half) is EMULATED: ``ElasticEngine._dispatch_delay``
+    chains an ``io_callback`` device-side sleep (GIL released) onto every
+    iteration's sampled tokens, standing in for device compute. The delay
+    is auto-matched to the measured host time per iteration (the point
+    where overlap buys the most and which an overlap-free engine pays
+    twice); the payload labels all of this."""
+    cfg = get_config("gpt2-small", smoke=True)
+    rng = np.random.default_rng(0)
+    source = make_source(cfg.vocab_size, 64, 4, seed=0)
+    dense = cm.instantiate(tfm.model_spec(cfg), jax.random.PRNGKey(0))
+    state = build_flexrank_state(cfg, dense, source)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 8)
+                    .astype(np.int32), max_new_tokens=48, budget=1.0)
+            for _ in range(8)]
+    gen = sum(r.max_new_tokens for r in reqs)
+
+    def mk(**kw):
+        return ElasticEngine(cfg, *state, max_batch=4, max_len=64,
+                             block_size=8, prefill_chunk=16, **kw)
+
+    sync = mk(lookahead=False)
+    pipe = mk(lookahead=True)
+    # calibrate: the lookahead engine only wins when the emulated device
+    # time is at least as long as the host work it hides (planning +
+    # dispatch overhead + stream emission); size the gap from an undelayed
+    # PIPELINED run's host split, with a 2ms floor — below that, jit-call
+    # dispatch overhead alone eats the gap on this CPU. Warming both
+    # engines' jit traces (including the delay graph) happens here too,
+    # out of the timed walls.
+    sync.generate(reqs, mode="continuous")
+    pipe.generate(reqs, mode="continuous")   # first run compiles: not cal
+    pipe.generate(reqs, mode="continuous")
+    cal = pipe.last_metrics.summary()
+    if delay_s is None:
+        delay_s = max(cal["host_ms_mean"], 2.0) * 1e-3
+    sync._dispatch_delay = pipe._dispatch_delay = delay_s
+
+    streams_s, itls_s, wall_s, m_s = _saturation_leg(sync, reqs)
+    streams_p, itls_p, wall_p, m_p = _saturation_leg(pipe, reqs)
+    assert streams_p == streams_s, \
+        "async token streams diverged from sync"                # identity
+    ss, sp = m_s.summary(), m_p.summary()
+    assert sp["lookahead_iterations"] > 0, "lookahead never engaged"
+
+    def stats(m, summary, itls, wall):
+        ttfts = [t.ttft for t in m.traces.values() if t.ttft is not None]
+        return {
+            "tokens_per_s": gen / wall,
+            "wall_s": wall,
+            "ttft_p50_s": float(np.percentile(ttfts, 50)),
+            "ttft_p99_s": float(np.percentile(ttfts, 99)),
+            "itl_p50_s": float(np.percentile(itls, 50)),
+            "itl_p99_s": float(np.percentile(itls, 99)),
+            "dispatch_ms_mean": summary["dispatch_ms_mean"],
+            "host_ms_mean": summary["host_ms_mean"],
+            "overlap_fraction": summary["overlap_fraction"],
+            "lookahead_iterations": summary["lookahead_iterations"],
+            "rollbacks": summary["rollbacks"],
+        }
+
+    sync_stats = stats(m_s, ss, itls_s, wall_s)
+    pipe_stats = stats(m_p, sp, itls_p, wall_p)
+    speedup = pipe_stats["tokens_per_s"] / sync_stats["tokens_per_s"]
+    emit("async_sync", wall_s * 1e6, f"{sync_stats['tokens_per_s']:.1f}")
+    emit("async_lookahead", wall_p * 1e6,
+         f"{pipe_stats['tokens_per_s']:.1f}")
+    emit("async_speedup", wall_p * 1e6, f"{speedup:.2f}x")
+    emit("async_itl_p50_ms", pipe_stats["itl_p50_s"] * 1e6,
+         f"{pipe_stats['itl_p50_s'] * 1e3:.1f}")
+    if speedup < 1.15:
+        print(f"# WARNING: lookahead speedup {speedup:.2f}x below the "
+              f"1.15x acceptance bar")
+    payload = {
+        "workload": "saturation: 8 requests at t=0, prompt=8, max_new=48, "
+                    "max_batch=4, prefill_chunk=16, greedy, streamed "
+                    "through StreamSession",
+        "regime": "dispatch-gap-bound, EMULATED: io_callback device-side "
+                  "sleep chained onto each iteration's sampled tokens "
+                  "(GIL released) stands in for device compute — this "
+                  "host is CPU-only and cannot overlap a real forward "
+                  "with host planning",
+        "cpu_count": os.cpu_count(),
+        "dispatch_delay_s": delay_s,
+        "sync": sync_stats,
+        "lookahead": pipe_stats,
+        "speedup": speedup,
+        "streams_bit_identical": True,
+        "acceptance": "speedup >= 1.15 and streams bit-identical",
+    }
+    path = pathlib.Path(out_path)
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {path}")
+
+
 def main(argv=()):
     # argv defaults to empty (NOT sys.argv): the benchmarks.run harness
     # imports this module and calls main() in-process, so parsing the
@@ -447,6 +589,12 @@ def main(argv=()):
                     help="measure tracing+metrics overhead (on vs off "
                          "tokens/s) instead of the classic workloads; "
                          "refreshes benchmarks/BENCH_obs.json")
+    ap.add_argument("--saturation", action="store_true",
+                    help="async (one-iteration lookahead) vs sync engine "
+                         "at saturation through the streaming front door "
+                         "(tokens/s, TTFT and inter-token p50/p99, "
+                         "bit-identity); refreshes "
+                         "benchmarks/BENCH_async.json")
     ap.add_argument("--prefix-sweep", action="store_true",
                     help="measure prefix caching on vs off (hit-request "
                          "TTFT cut on a shared-prefix stream, zero-hit "
@@ -461,6 +609,9 @@ def main(argv=()):
         return
     if args.prefix_sweep:
         prefix_sweep()
+        return
+    if args.saturation:
+        saturation()
         return
     cfg = get_config("gpt2-small", smoke=True)
     rng = np.random.default_rng(0)

@@ -32,6 +32,56 @@ from repro.models import transformer as tfm
 from repro.serving import ElasticEngine, Request, SamplingParams, SpecConfig
 
 
+def _run_stream(engine, reqs, args):
+    """Asyncio front door: submit ``reqs`` open-loop (Poisson gaps when
+    ``--arrival-rate`` is set), echo every token as it streams, optionally
+    cancel every ``--cancel-nth`` request after its second token. Returns
+    per-request Results in submission order (cancelled ones included)."""
+    import asyncio
+    import threading
+
+    from repro.serving.session import StreamSession, stream_request
+
+    async def _drive():
+        session = StreamSession(stream_buffer=8)
+        session.loop = asyncio.get_running_loop()
+        worker = threading.Thread(target=engine.serve_session,
+                                  args=(session,), daemon=True)
+        worker.start()
+        rng = np.random.default_rng(args.seed + 1)
+
+        async def client(i, rq):
+            cancel_after = (2 if args.cancel_nth
+                            and (i + 1) % args.cancel_nth == 0 else None)
+            h = session.submit(rq)
+            toks = []
+            async for tok in h.tokens():
+                toks.append(tok)
+                print(f"req {i} token[{len(toks) - 1}] = {tok}", flush=True)
+                if cancel_after is not None and len(toks) >= cancel_after:
+                    print(f"req {i}: cancelling mid-stream", flush=True)
+                    h.cancel()
+            result = await h.wait_result()
+            state = "cancelled" if (result is not None
+                                    and result.cancelled) else "done"
+            print(f"req {i}: {state}, {len(toks)} tokens streamed",
+                  flush=True)
+            return result
+
+        tasks = []
+        for i, rq in enumerate(reqs):
+            if args.arrival_rate > 0 and i:
+                await asyncio.sleep(rng.exponential(1.0 / args.arrival_rate))
+            tasks.append(asyncio.create_task(client(i, rq)))
+        results = await asyncio.gather(*tasks)
+        session.close()
+        await session.join()
+        worker.join()
+        return list(results)
+
+    return asyncio.run(_drive())
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2-small")
@@ -85,6 +135,24 @@ def main(argv=None):
                          "prompt prefix reuse its K/V instead of "
                          "re-prefilling (default follows the "
                          "REPRO_PREFIX_CACHE env knob, off otherwise)")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve through the asyncio streaming front door "
+                         "(open-loop arrivals, per-token streaming) instead "
+                         "of the closed-batch generate() driver")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="with --stream: mean Poisson request arrival rate "
+                         "in req/s (0 = submit everything immediately)")
+    ap.add_argument("--cancel-nth", type=int, default=0,
+                    help="with --stream: cancel every Nth request "
+                         "mid-stream after 2 tokens (0 = never) — "
+                         "exercises client-cancellation unwinding")
+    ap.add_argument("--lookahead", action="store_true",
+                    help="one-iteration lookahead pipelining: dispatch "
+                         "iteration i+1 from speculatively-advanced "
+                         "scheduler state before committing i (default "
+                         "follows the REPRO_ASYNC env knob, off otherwise)")
+    ap.add_argument("--no-lookahead", action="store_true",
+                    help="force lookahead off regardless of REPRO_ASYNC")
     ap.add_argument("--host-sampling", action="store_true",
                     help="sample on the host (the oracle path: gathered "
                          "logits ship off-device, python per-sequence "
@@ -155,6 +223,8 @@ def main(argv=None):
                 if args.metrics_out or live_plane else None)
     watchdog = (obs.Watchdog(postmortem_dir=args.postmortem_dir or None)
                 if args.watchdog else None)
+    lookahead = (True if args.lookahead
+                 else False if args.no_lookahead else None)
     engine = ElasticEngine(cfg, params_fact, table, infos,
                            max_batch=args.max_batch, max_len=args.max_len,
                            block_size=args.block_size,
@@ -164,6 +234,7 @@ def main(argv=None):
                            spec=spec,
                            device_sampling=not args.host_sampling,
                            prefix_cache=True if args.prefix_cache else None,
+                           lookahead=lookahead,
                            tracer=tracer, registry=registry,
                            watchdog=watchdog,
                            costaudit=True if live_plane else None)
@@ -192,7 +263,10 @@ def main(argv=None):
                             budget=budgets[i % len(budgets)],
                             sampling=sampling))
     with obs.profiling.profile(args.jax_profile):
-        results = engine.generate(reqs, mode=args.engine)
+        if args.stream:
+            results = _run_stream(engine, reqs, args)
+        else:
+            results = engine.generate(reqs, mode=args.engine)
     if args.trace_out:
         if args.trace_out.endswith(".jsonl"):
             engine.tracer.export_jsonl(args.trace_out)

@@ -100,6 +100,24 @@ class ContinuousBatcher:
         self._next_token[slot] = 0
         return seq
 
+    # ------------------------------------------- speculative-plan rollback
+
+    def snapshot(self) -> dict:
+        """Copy of the slot assignments and feed state. Sequence *objects*
+        are captured by reference — their mutable fields are snapshotted
+        separately (``Sequence.snapshot``) by whoever coordinates the
+        rollback."""
+        return {"slots": list(self.slots),
+                "next_token": self._next_token.copy(),
+                "seated_at": self._seated_at.copy(),
+                "seat_counter": self._seat_counter}
+
+    def restore(self, snap: dict) -> None:
+        self.slots = list(snap["slots"])
+        self._next_token = snap["next_token"].copy()
+        self._seated_at = snap["seated_at"].copy()
+        self._seat_counter = snap["seat_counter"]
+
     # ------------------------------------------------------- device step
 
     def next_token(self, slot: int) -> int:

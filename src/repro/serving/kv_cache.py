@@ -116,6 +116,19 @@ class FreeRunTracker:
             heapq.heappop(self._heap)       # stale entry from a merged run
         return 0
 
+    def snapshot(self) -> tuple:
+        """Copy of the full run state, for speculative-plan rollback."""
+        return (dict(self._heads), dict(self._tails), list(self._starts),
+                list(self._heap), self.count)
+
+    def restore(self, snap: tuple) -> None:
+        heads, tails, starts, heap, count = snap
+        self._heads = dict(heads)
+        self._tails = dict(tails)
+        self._starts = list(starts)
+        self._heap = list(heap)
+        self.count = count
+
 
 class BlockAllocator:
     """Refcounted block pool; block 0 is never handed out.
@@ -138,6 +151,7 @@ class BlockAllocator:
         self._is_cached = np.zeros(num_blocks, bool)
         self._runs = FreeRunTracker(1, num_blocks - 1)
         self.evict_hook = evict_hook
+        self._alloc_log: Optional[List[int]] = None
 
     @property
     def free_count(self) -> int:
@@ -169,7 +183,23 @@ class BlockAllocator:
                     self.evict_hook(b)
             self._ref[b] = 1
             self._runs.remove(b)
+            if self._alloc_log is not None:
+                self._alloc_log.append(b)
             out.append(b)
+        return out
+
+    def begin_alloc_log(self) -> None:
+        """Record every block id handed out until ``end_alloc_log``. The
+        pipelined engine opens a log around each speculative plan: an
+        abandoned dispatch has WRITTEN device K/V into the blocks it
+        allocated, so after the host rollback those blocks' prefix-index
+        entries must drop and any sequence that (post-restore) still holds
+        one must recompute."""
+        self._alloc_log = []
+
+    def end_alloc_log(self) -> List[int]:
+        out = self._alloc_log if self._alloc_log is not None else []
+        self._alloc_log = None
         return out
 
     def incref(self, b: int) -> None:
@@ -226,6 +256,21 @@ class BlockAllocator:
         if n == 0:
             return 0.0
         return 1.0 - self._runs.max_run() / n
+
+    def snapshot(self) -> tuple:
+        """Copy of every mutable allocator structure (the evict hook is
+        configuration, not state). Restoring twice from one snapshot is
+        legal — every ``restore`` re-copies."""
+        return (list(self._free), list(self._cached), self._ref.copy(),
+                self._is_cached.copy(), self._runs.snapshot())
+
+    def restore(self, snap: tuple) -> None:
+        free, cached, ref, is_cached, runs = snap
+        self._free = list(free)
+        self._cached = OrderedDict((b, None) for b in cached)
+        self._ref = ref.copy()
+        self._is_cached = is_cached.copy()
+        self._runs.restore(runs)
 
     def fragmentation_exact(self) -> float:
         """Reference implementation (full sort) for parity tests."""
@@ -462,6 +507,36 @@ class PagedKVCache:
         self.slots[slot] = None
         self._tables[slot, :] = NULL_BLOCK
 
+    # ------------------------------------------- speculative-plan rollback
+
+    def snapshot(self) -> dict:
+        """Copy of the *host* bookkeeping: allocator, slot states, tables,
+        prefix index, stats. The device pools are deliberately excluded —
+        donated buffers cannot be un-donated, and stale K/V writes from an
+        abandoned speculative dispatch are harmless (attention masks by
+        context length and every live position is written before it is
+        read), so rollback restores the host view and leaves the device
+        pools wherever the in-flight dispatch chain put them."""
+        return {
+            "allocator": self.allocator.snapshot(),
+            "slots": [None if s is None else (list(s.blocks), s.num_tokens)
+                      for s in self.slots],
+            "tables": self._tables.copy(),
+            "prefix_index": dict(self._prefix_index),
+            "block_key": dict(self._block_key),
+            "stats": dataclasses.replace(self.stats),
+        }
+
+    def restore(self, snap: dict) -> None:
+        self.allocator.restore(snap["allocator"])
+        self.slots = [None if s is None else SlotState(blocks=list(s[0]),
+                                                       num_tokens=s[1])
+                      for s in snap["slots"]]
+        self._tables = snap["tables"].copy()
+        self._prefix_index = dict(snap["prefix_index"])
+        self._block_key = dict(snap["block_key"])
+        self.stats = dataclasses.replace(snap["stats"])
+
     # ----------------------------------------------------- prefix caching
 
     def _prefix_key(self, tokens: np.ndarray, nblocks: int) -> bytes:
@@ -510,6 +585,23 @@ class PagedKVCache:
                       "tokens": st.num_tokens,
                       "cached": len(self._prefix_index)})
         return st.num_tokens
+
+    def peek_prefix(self, tokens) -> int:
+        """Read-only variant of ``probe_prefix``: the prompt tokens a probe
+        *would* cover right now, without touching any state. The pipelined
+        engine uses it at commit time to detect prefix-hit drift — a
+        speculated admission that probed before iteration ``i``'s chunks
+        were indexed and would hit more blocks if re-admitted."""
+        if not self.prefix_cache:
+            return 0
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        limit = (len(toks) - 1) // self.block_size
+        n = 0
+        for i in range(limit):
+            if self._prefix_key(toks, i + 1) not in self._prefix_index:
+                break
+            n += 1
+        return n * self.block_size
 
     def register_prefix(self, slot: int, tokens, upto: int) -> int:
         """Index the slot's blocks that are fully covered by the first

@@ -56,6 +56,7 @@ class RequestTrace:
     new_tokens: int = 0
     preemptions: int = 0
     prefix_hit_tokens: int = 0             # prompt tokens skipped via cache
+    cancelled: bool = False                # client cancelled mid-flight
 
     @property
     def ttft(self) -> Optional[float]:
@@ -132,6 +133,19 @@ class ServingMetrics:
             self._m_host = registry.histogram(
                 "repro_iteration_host_seconds",
                 "per-iteration host scheduling/commit time")
+            self._m_overlap = registry.histogram(
+                "repro_iteration_overlap_seconds",
+                "per-iteration device time hidden under host work "
+                "(lookahead pipelining)")
+            self._m_lookahead = registry.counter(
+                "repro_lookahead_iterations_total",
+                "iterations planned speculatively before the prior commit")
+            self._m_rollback = registry.counter(
+                "repro_rollbacks_total",
+                "speculative plans invalidated and replanned (label reason)")
+            self._m_cancel = registry.counter(
+                "repro_cancellations_total",
+                "requests cancelled by the client mid-flight")
             self._m_draft = registry.counter(
                 "repro_spec_draft_tokens_total", "draft tokens proposed")
             self._m_accept = registry.counter(
@@ -171,12 +185,26 @@ class ServingMetrics:
         # one (draft_tokens, verify_tokens, accepted_tokens, drafting_seqs)
         # tuple per speculative round — the draft/verify audit trail
         self.spec_round_log: List[Tuple[int, int, int, int]] = []
-        # one (dispatch_s, host_s) pair per iteration: device time (jit
-        # dispatch + sync + the iteration's device->host transfer) vs host
-        # time (planning, commits, python sampling on the host-oracle
-        # path) — the observable the device-resident sampling pipeline is
-        # meant to shrink
-        self.timing_log: List[Tuple[float, float]] = []
+        # one (dispatch_s, host_s, overlap_s) triple per iteration.
+        # dispatch_s: the VISIBLE wait on the device — time the host spent
+        # blocked syncing the iteration's outputs; host_s: everything else
+        # the iteration spent on the host (planning, commits, python
+        # sampling on the host-oracle path); overlap_s: device time hidden
+        # under host work by lookahead pipelining (the window between
+        # enqueueing the dispatch and starting the sync, during which the
+        # device ran while the host planned the next iteration). Serial
+        # engines report overlap_s = 0 and dispatch_s = full device time.
+        # The attribution invariant either way: wall-clock ~ sum(dispatch)
+        # + sum(host) — overlapped device time is never double-counted
+        # (pinned by the scripted-clock test in tests/test_metrics.py).
+        self.timing_log: List[Tuple[float, float, float]] = []
+        # pipelined-engine counters: speculatively planned iterations,
+        # rollbacks (plan invalidated by the prior commit) by reason, and
+        # client cancellations
+        self.lookahead_iterations = 0
+        self.rollbacks = 0
+        self.rollback_reasons: Dict[str, int] = {}
+        self.cancellations = 0
         self.draft_tokens = 0
         self.accepted_draft_tokens = 0
         self.drafting_seq_rounds = 0
@@ -336,16 +364,59 @@ class ServingMetrics:
             if self._accept_ewma is not None:
                 self._m_ewma.set(self._accept_ewma)
 
-    def on_iteration_timing(self, dispatch_s: float, host_s: float) -> None:
-        """One iteration's device/host wall-time split. ``dispatch_s``:
-        jitted forward (and fused sampling) including the sync on its
-        outputs; ``host_s``: everything else the iteration spent on the
+    def on_iteration_timing(self, dispatch_s: float, host_s: float,
+                            overlap_s: float = 0.0) -> None:
+        """One iteration's device/host wall-time split. ``dispatch_s``: the
+        host's VISIBLE wait on the jitted forward (and fused sampling) —
+        for serial engines that is the whole device time, for the pipelined
+        engine only the residual sync after host work ran under the
+        dispatch; ``host_s``: everything else the iteration spent on the
         host — scheduling, cache bookkeeping, commits, and (on the
-        host-sampling oracle path) the per-row python sampling loop."""
-        self.timing_log.append((dispatch_s, max(host_s, 0.0)))
+        host-sampling oracle path) the per-row python sampling loop;
+        ``overlap_s``: device time hidden under host work (0 for serial
+        engines). ``dispatch_s + host_s`` always sums to the iteration's
+        wall-clock share — overlapped time is attributed once, to the host
+        work that hid it, never double-counted."""
+        self.timing_log.append((dispatch_s, max(host_s, 0.0),
+                                max(overlap_s, 0.0)))
         if self.registry is not None:
             self._m_disp.observe(dispatch_s)
             self._m_host.observe(max(host_s, 0.0))
+            if overlap_s > 0.0:
+                self._m_overlap.observe(overlap_s)
+
+    def on_lookahead(self) -> None:
+        """One iteration was planned + dispatched speculatively, before the
+        previous iteration's commit."""
+        self.lookahead_iterations += 1
+        if self.registry is not None:
+            self._m_lookahead.inc()
+
+    def on_rollback(self, reason: str) -> None:
+        """A speculative plan was invalidated by the commit it raced
+        (forced fault, prefix-hit drift, cancellation, ...) — its host
+        state was restored and the iteration replanned."""
+        self.rollbacks += 1
+        self.rollback_reasons[reason] = (
+            self.rollback_reasons.get(reason, 0) + 1)
+        if self.registry is not None:
+            self._m_rollback.labels(reason=reason).inc()
+
+    def on_cancel(self, req_id: int) -> None:
+        """Client cancelled the request mid-flight; its slot and blocks are
+        already freed by the engine. The trace keeps the tokens delivered
+        before the cancel and is closed with ``cancelled=True``."""
+        self.cancellations += 1
+        tr = self.traces[req_id]
+        tr.cancelled = True
+        tr.finish_t = self.now()
+        self._end = tr.finish_t
+        if self.tracer.enabled:
+            self.tracer.instant("cancel", CAT_REQUEST,
+                                tid=request_tid(req_id),
+                                args={"delivered": tr.new_tokens})
+        if self.registry is not None:
+            self._m_cancel.inc()
 
     def on_token(self, req_id: int) -> None:
         self.traces[req_id].new_tokens += 1
@@ -441,6 +512,16 @@ class ServingMetrics:
             "host_ms_mean": _mean([t[1] for t in self.timing_log]) * 1e3,
             "dispatch_s_total": sum(t[0] for t in self.timing_log),
             "host_s_total": sum(t[1] for t in self.timing_log),
+            "overlap_ms_mean": _mean([t[2] for t in self.timing_log]) * 1e3,
+            "overlap_s_total": sum(t[2] for t in self.timing_log),
+            # fraction of total device busy time hidden under host work:
+            # overlap / (overlap + visible dispatch). 0 for serial engines.
+            "overlap_fraction": (
+                sum(t[2] for t in self.timing_log)
+                / max(sum(t[0] + t[2] for t in self.timing_log), 1e-12)),
+            "lookahead_iterations": self.lookahead_iterations,
+            "rollbacks": self.rollbacks,
+            "cancellations": self.cancellations,
             "preemptions": self.preemptions,
             "cache_occupancy_mean": _mean(occ),
             "cache_occupancy_peak": max(occ) if occ else 0.0,

@@ -47,6 +47,7 @@ distributed as target-only sampling with the same knobs.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import Optional
 
@@ -120,6 +121,23 @@ class SamplerState:
     @property
     def greedy(self) -> bool:
         return self.params.temperature <= 0.0
+
+    def state_snapshot(self):
+        """Copy of the sequential-stream PRNG state (None for greedy — the
+        stream is never materialized). Keyed draws are stateless and need
+        no snapshot. Used by the pipelined engine's speculative-plan
+        rollback: restoring makes the stream replay bit-identically."""
+        if self._rng is None:
+            return None
+        return copy.deepcopy(self._rng.bit_generator.state)
+
+    def state_restore(self, snap) -> None:
+        if snap is None:
+            self._rng = None
+            return
+        if self._rng is None:
+            self._rng = np.random.default_rng(self._key)
+        self._rng.bit_generator.state = copy.deepcopy(snap)
 
     def probs(self, logits: np.ndarray) -> np.ndarray:
         """The warped categorical this sampler draws from, as a (V,) float64

@@ -68,6 +68,9 @@ class Result:
     budget_row: int
     deployed_params: int
     ttft_s: Optional[float] = None
+    # client cancelled mid-flight: ``tokens`` holds the prompt plus whatever
+    # was generated (and delivered) before the cancellation took effect
+    cancelled: bool = False
 
 
 @dataclasses.dataclass
@@ -102,6 +105,30 @@ class Sequence:
     @property
     def remaining(self) -> int:
         return self.request.max_new_tokens - len(self.generated)
+
+    def snapshot(self) -> dict:
+        """Copy of every mutable scheduling field, for speculative-plan
+        rollback (the pipelined engine) and the double-buffered-state test
+        harness. ``request``/``req_id``/``row`` are immutable per sequence
+        and excluded."""
+        return {"generated": list(self.generated),
+                "admissions": self.admissions, "state": self.state,
+                "prefill_pos": self.prefill_pos, "spec_k": self.spec_k,
+                "spec_accept_ewma": self.spec_accept_ewma,
+                "spec_idle_rounds": self.spec_idle_rounds,
+                "sampler_state": (None if self.sampler is None
+                                  else self.sampler.state_snapshot())}
+
+    def restore(self, snap: dict) -> None:
+        self.generated[:] = snap["generated"]
+        self.admissions = snap["admissions"]
+        self.state = snap["state"]
+        self.prefill_pos = snap["prefill_pos"]
+        self.spec_k = snap["spec_k"]
+        self.spec_accept_ewma = snap["spec_accept_ewma"]
+        self.spec_idle_rounds = snap["spec_idle_rounds"]
+        if self.sampler is not None:
+            self.sampler.state_restore(snap["sampler_state"])
 
     def reset_for_recompute(self) -> None:
         self.generated.clear()
@@ -192,6 +219,44 @@ class Scheduler:
         if row is None:
             return any(q for q in self.queues.values())
         return bool(self.queues.get(row))
+
+    def remove_waiting(self, seq: Sequence) -> bool:
+        """Drop a still-queued sequence (client cancellation before
+        admission). Returns False if the sequence is not waiting in its
+        row queue (already seated, finished, or never submitted here)."""
+        q = self.queues.get(seq.row)
+        if q is None:
+            return False
+        try:
+            q.remove(seq)
+        except ValueError:
+            return False
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "cancel_waiting", CAT_SCHED,
+                args={"req": seq.req_id, "row": seq.row,
+                      "reason": "client_cancel"})
+        return True
+
+    def snapshot(self, row: Optional[int] = None) -> dict:
+        """Copy of the queue structure (sequence objects by reference; their
+        fields snapshot via ``Sequence.snapshot``). With ``row`` set, only
+        that row's queue is captured — the pipelined engine speculates
+        within one budget row and other queues cannot change under it."""
+        if row is not None:
+            return {"row": row,
+                    "queue": list(self.queues.get(row, ())),
+                    "next_id": self._next_id}
+        return {"row": None,
+                "queues": {r: list(q) for r, q in self.queues.items()},
+                "next_id": self._next_id}
+
+    def restore(self, snap: dict) -> None:
+        if snap["row"] is not None:
+            self.queues[snap["row"]] = deque(snap["queue"])
+        else:
+            self.queues = {r: deque(q) for r, q in snap["queues"].items()}
+        self._next_id = snap["next_id"]
 
     @staticmethod
     def pick_victim(active: List[Sequence]) -> Sequence:

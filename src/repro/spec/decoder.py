@@ -205,6 +205,43 @@ class SpecDecoder:
         self.cache.free_slot(seat)
         self.cache.free_slot(self._draft_slot(seat))
 
+    def _apply_cancellations(self) -> None:
+        """Round-boundary cancellation sweep. The speculative decoder is
+        commit-serial (no in-flight lookahead), so entries apply
+        immediately and the committed cursor advances in one step; a
+        seated victim must release its slot PAIR, which is why this does
+        not reuse ``ElasticEngine._apply_cancellations`` (that frees a
+        single slot)."""
+        eng = self.engine
+        with eng._cancel_lock:
+            n = len(eng._cancel_list)
+            entries = eng._cancel_list[eng._cancel_cursor: n]
+        for req_id in entries:
+            seq = eng._seq_index.get(req_id)
+            if seq is None or seq.state == "finished":
+                continue
+            if self.sched.remove_waiting(seq):
+                eng._finish_cancelled(seq, self.metrics, self.results)
+                continue
+            for seat, s in enumerate(self.batcher.slots):
+                if s is seq:
+                    self.batcher.leave(seat)
+                    self._free_pair(seat)
+                    eng._finish_cancelled(seq, self.metrics, self.results)
+                    break
+        eng._cancel_cursor = n
+
+    def _stream_commit(self, seq: Sequence, commit) -> None:
+        """Stream a round's committed tokens, indexed by their positions in
+        ``seq.generated`` — call strictly BEFORE extending the list. Values
+        are real here (commit-serial), so no deferral is needed."""
+        sess = self.engine._session
+        if sess is None:
+            return
+        base = len(seq.generated)
+        for j, tok in enumerate(commit):
+            sess.emit(seq.req_id, base + j, int(tok))
+
     def _block_holders(self) -> List[Sequence]:
         """Seated sequences holding blocks in either slot of their pair."""
         out = []
@@ -240,6 +277,8 @@ class SpecDecoder:
         while True:
             it0 = self.metrics.now()
             self._disp_s = 0.0
+            eng._drain_intake(sched, self.metrics)
+            self._apply_cancellations()
             # admission: seat waiting requests with a slot PAIR each
             for seat in self.batcher.free_slots():
                 if not sched.has_waiting(self.row):
@@ -747,6 +786,7 @@ class SpecDecoder:
             verified += p.k + 1
             accepted_total += m
             committed_total += len(commit)
+            self._stream_commit(p.seq, commit)
             p.seq.generated.extend(commit)
             for _ in commit:
                 metrics.on_token(p.seq.req_id)
@@ -772,6 +812,7 @@ class SpecDecoder:
             if seq.prefill_pos == seq.prompt_len:
                 metrics.on_prefill_end(seq.req_id)
                 first = int(chunk_h[finish_rows[seat]])
+                self._stream_commit(seq, [first])
                 seq.generated.append(first)
                 metrics.on_first_token(seq.req_id)
                 if seq.done:                     # max_new_tokens == 1
@@ -845,6 +886,7 @@ class SpecDecoder:
             verified += run
             accepted_total += m
             committed_total += len(commit)
+            self._stream_commit(p.seq, commit)
             p.seq.generated.extend(commit)
             for _ in commit:
                 metrics.on_token(p.seq.req_id)
@@ -872,6 +914,7 @@ class SpecDecoder:
             if seq.prefill_pos == seq.prompt_len:
                 metrics.on_prefill_end(seq.req_id)
                 first = self._first_token(seq, logits[flat + n - 1])
+                self._stream_commit(seq, [first])
                 seq.generated.append(first)
                 metrics.on_first_token(seq.req_id)
                 if seq.done:                     # max_new_tokens == 1

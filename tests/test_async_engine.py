@@ -1,0 +1,505 @@
+"""Async pipelined engine hardening suite.
+
+Four planes, mirroring the guarantees the one-iteration-lookahead engine
+makes (src/repro/serving/engine.py):
+
+  * token-identity matrix — the pipelined driver (``lookahead=True``) must
+    be bit-identical to the synchronous engine across chunked prefill,
+    prefix caching, preemption pressure, speculative decoding, and
+    greedy + stochastic sampling mixes, including under forced rollbacks
+    (fault injection via ``ElasticEngine.lookahead_fault``).
+  * double-buffered scheduler state — a seeded state machine drives the
+    REAL planning/predicted-advance/commit/rollback/cancel machinery and
+    checks that a restored snapshot is byte-equal to what was captured and
+    that the block allocator never leaks. A Hypothesis ``RuleBasedState-
+    Machine`` wrapper engages when the package is installed (it is not
+    baked into the CI image; the seeded driver is the load-bearing test).
+  * streaming front door — per-token ordering, mid-stream cancellation
+    unwinding in-flight state, cancel-before-admission, and slow-consumer
+    backpressure through the bounded per-handle queue.
+  * trace balance — every "lookahead" span resolves to exactly one
+    "lookahead_commit" or "rollback" instant (the CI async-matrix job's
+    invariant).
+"""
+import asyncio
+import random
+import threading
+
+import numpy as np
+import jax
+import pytest
+
+from repro import obs
+from repro.configs import get_config
+from repro.serving import (ContinuousBatcher, ElasticEngine, PagedKVCache,
+                           Request, SamplingParams, Scheduler, SpecConfig)
+from repro.serving.engine import _DeferredLog
+from repro.serving.metrics import ServingMetrics
+from repro.serving.session import StreamSession
+
+BLOCK = 8
+STOCH = dict(temperature=0.8, top_k=8)
+
+# prompts straddle block boundaries; max_new covers one-token edges and
+# multi-round decodes; budgets exercise row routing; every other request
+# samples stochastically (position-keyed PRNG => identity must still hold)
+MIX = [(7, 6, 1.0, False), (8, 3, 0.4, True), (9, 7, 1.0, False),
+       (17, 2, 0.7, True), (4, 1, 1.0, False), (12, 8, 1.0, True)]
+
+
+@pytest.fixture(scope="module")
+def smoke_state():
+    from repro.data import make_source
+    from repro.launch.train import build_flexrank_state
+    from repro.models import common as cm
+    from repro.models import transformer as tfm
+    cfg = get_config("gpt2-small", smoke=True)
+    source = make_source(cfg.vocab_size, 64, 4, seed=0)
+    dense = cm.instantiate(tfm.model_spec(cfg), jax.random.PRNGKey(0))
+    params_fact, table, infos = build_flexrank_state(cfg, dense, source)
+    return cfg, params_fact, table, infos
+
+
+def _mk(state, **kw):
+    cfg, params_fact, table, infos = state
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("block_size", BLOCK)
+    return ElasticEngine(cfg, params_fact, table, infos, **kw)
+
+
+def _requests(cfg, spec=MIX, seed=7):
+    out = []
+    for i, (pl, mn, b, stoch) in enumerate(spec):
+        rng = np.random.default_rng(seed + i)
+        prompt = rng.integers(0, cfg.vocab_size, pl).astype(np.int32)
+        sampling = SamplingParams(seed=seed, **STOCH) if stoch else None
+        out.append(Request(prompt=prompt, max_new_tokens=mn, budget=b,
+                           sampling=sampling))
+    return out
+
+
+def _gen(reqs, results):
+    return [list(map(int, r.tokens[len(rq.prompt):]))
+            for rq, r in zip(reqs, results)]
+
+
+# ------------------------------------------------- satellite: identity matrix
+
+# per-case (engine kwargs, request spec). tight_blocks shrinks the pool
+# under long decodes so growing sequences preempt each other mid-stream
+# (the proven cache-pressure recipe from tests/test_serving.py).
+MATRIX = {
+    "plain": (dict(), MIX),
+    "chunked": (dict(prefill_chunk=4, token_budget=8), MIX),
+    "prefix": (dict(prefix_cache=True), MIX),
+    "tight_blocks": (dict(max_len=32, block_size=4, num_blocks=4,
+                          prefill_chunk=4, token_budget=8),
+                     [(4, 11, 1.0, False), (4, 11, 1.0, True),
+                      (6, 9, 1.0, False), (9, 7, 1.0, True)]),
+}
+
+
+@pytest.fixture(scope="module")
+def sync_baselines(smoke_state):
+    """Sync-engine outputs per matrix case, computed once."""
+    cache = {}
+
+    def get(case):
+        if case not in cache:
+            kw, spec = MATRIX[case]
+            eng = _mk(smoke_state, lookahead=False, **kw)
+            reqs = _requests(smoke_state[0], spec=spec)
+            cache[case] = _gen(reqs, eng.generate(reqs))
+        return cache[case]
+
+    return get
+
+
+@pytest.mark.parametrize("case", list(MATRIX))
+def test_lookahead_identity_matrix(smoke_state, sync_baselines, case):
+    """Pipelined output must be bit-identical to the sync engine for a
+    greedy + stochastic request mix under every cache/prefill regime —
+    including mid-prefill preemption pressure (tight_blocks)."""
+    kw, spec = MATRIX[case]
+    eng = _mk(smoke_state, lookahead=True, **kw)
+    reqs = _requests(smoke_state[0], spec=spec)
+    got = _gen(reqs, eng.generate(reqs))
+    assert got == sync_baselines(case)
+    m = eng.last_metrics.summary()
+    assert m["lookahead_iterations"] > 0
+    assert m["overlap_fraction"] > 0.0
+    if case == "tight_blocks":
+        assert m["preemptions"] > 0       # the case exists to force these
+    if case == "plain":
+        assert m["rollbacks"] == 0        # nothing invalidates speculation
+
+
+@pytest.mark.parametrize("case", ["plain", "prefix"])
+def test_forced_rollback_identity(smoke_state, sync_baselines, case):
+    """Fault injection forces periodic rollbacks; the restore + commit-
+    replay path must leave outputs bit-identical."""
+    kw, spec = MATRIX[case]
+    eng = _mk(smoke_state, lookahead=True, **kw)
+    eng.lookahead_fault = lambda it: it % 3 == 0
+    reqs = _requests(smoke_state[0], spec=spec)
+    got = _gen(reqs, eng.generate(reqs))
+    assert got == sync_baselines(case)
+    m = eng.last_metrics.summary()
+    assert m["rollbacks"] > 0
+    assert m["lookahead_iterations"] > m["rollbacks"]
+
+
+def test_lookahead_identity_with_spec(smoke_state):
+    """Speculative rows serve through the commit-serial SpecDecoder in
+    both modes; non-speculative rows pipeline. Outputs must match."""
+    spec = SpecConfig(draft_rank=0.9, spec_len=3)
+    reqs = _requests(smoke_state[0])
+    base = _gen(reqs, _mk(smoke_state, spec=spec,
+                          lookahead=False).generate(reqs))
+    eng = _mk(smoke_state, spec=spec, lookahead=True)
+    assert _gen(reqs, eng.generate(reqs)) == base
+    assert eng.last_metrics.summary()["spec_rounds"] > 0
+
+
+def test_lookahead_requires_device_sampling(smoke_state):
+    """Host-oracle sampling cannot overlap (the sample is the sync); the
+    engine silently serves the sync path rather than failing."""
+    eng = _mk(smoke_state, lookahead=True, device_sampling=False)
+    reqs = _requests(smoke_state[0], spec=MIX[:2])
+    base = _gen(reqs, _mk(smoke_state, lookahead=False,
+                          device_sampling=False).generate(reqs))
+    assert _gen(reqs, eng.generate(reqs)) == base
+    assert eng.last_metrics.summary()["lookahead_iterations"] == 0
+
+
+def test_trace_balance(smoke_state):
+    """CI invariant: every lookahead span ends in exactly one commit or
+    rollback instant — none lost, none double-resolved."""
+    eng = _mk(smoke_state, lookahead=True, tracer=obs.make_tracer(True))
+    eng.lookahead_fault = lambda it: it % 4 == 0
+    reqs = _requests(smoke_state[0])
+    eng.generate(reqs)
+    names = [e["name"] for e in eng.tracer.to_chrome()["traceEvents"]]
+    lookaheads = names.count("lookahead")
+    assert lookaheads > 0
+    assert lookaheads == (names.count("lookahead_commit")
+                          + names.count("rollback"))
+
+
+# --------------------------------- satellite: double-buffered state machine
+
+class _RowMachine:
+    """Drives the engine's real double-buffer primitives — plan + predicted
+    advance (dispatch), commit-apply, rollback-restore, cancel — against
+    standalone scheduler/cache/batcher state, checking after every rollback
+    that the restored state is byte-equal to the snapshot and that block
+    accounting stays exact."""
+
+    def __init__(self, state, seed):
+        cfg = state[0]
+        self.eng = _mk(state, prefill_chunk=4, token_budget=8)
+        self.sched = Scheduler(self.eng.router)
+        self.cache = PagedKVCache(cfg, max_batch=2, max_len=32,
+                                  block_size=4, num_blocks=10,
+                                  prefix_cache=False)
+        self.batcher = ContinuousBatcher(2)
+        self.metrics = ServingMetrics()
+        self.results = {}
+        self.rnd = random.Random(seed)
+        self.total_blocks = self.cache.allocator.free_count
+        self.pending = None      # (plan, snapshot, canonical-bytes)
+        self.intake = []         # arrivals buffered while a plan is in flight
+        self.row = 0             # single-budget machine: one row queue
+        self.req_ids = []
+        self.submitted = 0
+
+    def canon(self) -> bytes:
+        """Canonical byte serialization of all double-buffered state."""
+        seqs = {s.req_id: s for s in self.batcher.active_sequences()}
+        for q in self.sched.queues.values():
+            for s in q:
+                seqs[s.req_id] = s
+        return repr((self.sched.snapshot(), self.cache.snapshot(),
+                     self.batcher.snapshot(),
+                     sorted((rid, s.snapshot())
+                            for rid, s in seqs.items()))).encode()
+
+    def check_blocks(self):
+        """Exact block accounting (prefix cache off => no cached blocks):
+        every block is either held by a slot or on the free list."""
+        held = set()
+        for st in self.cache.slots:
+            if st is not None:
+                held.update(st.blocks)
+        assert len(held) + self.cache.allocator.free_count \
+            == self.total_blocks
+
+    def submit(self):
+        """Arrivals buffer while a speculative plan is in flight and enter
+        the scheduler only at commit/rollback boundaries — the intake
+        discipline ``serve_session`` enforces (a submission landing between
+        snapshot and restore would be erased by the rollback)."""
+        pl = self.rnd.randint(1, 20)
+        mn = self.rnd.randint(1, 5)
+        prompt = np.asarray([self.rnd.randrange(64) for _ in range(pl)],
+                            np.int32)
+        req = Request(prompt=prompt, max_new_tokens=mn, budget=1.0)
+        self.intake.append(req)
+        self.submitted += 1
+        if self.pending is None:
+            self.drain_intake()
+
+    def drain_intake(self):
+        for req in self.intake:
+            seq = self.sched.submit(req)
+            self.metrics.on_submit(seq.req_id)
+            self.eng._seq_index[seq.req_id] = seq
+            self.row = seq.row
+            self.req_ids.append(seq.req_id)
+        self.intake = []
+
+    def dispatch(self):
+        if self.pending is not None:
+            return
+        snap = self.eng._snapshot_row(self.sched, self.cache, self.batcher)
+        before = self.canon()
+        self.cache.allocator.begin_alloc_log()
+        plog = _DeferredLog(self.eng, self.metrics, self.results)
+        plan = self.eng._plan_iteration(self.row, self.sched, self.cache,
+                                        self.batcher, self.metrics, plog)
+        if not plan.empty:
+            self.eng._advance_predicted(plan, self.cache, self.batcher,
+                                        self.metrics)
+        self.pending = (plan, snap, before)
+
+    def commit(self):
+        if self.pending is None:
+            return
+        plan, _, _ = self.pending
+        self.cache.allocator.end_alloc_log()
+        plan.sampled = np.arange(64, dtype=np.int64)  # dummy device values
+        self.eng._commit_apply(plan, self.batcher)
+        self.eng._cancel_cursor = max(self.eng._cancel_cursor,
+                                      plan.cancel_cursor)
+        plan.plog.flush()
+        self.pending = None
+        self.drain_intake()
+
+    def rollback(self):
+        if self.pending is None:
+            return
+        plan, snap, before = self.pending
+        touched = self.cache.allocator.end_alloc_log()
+        self.eng._restore_row(snap, self.sched, self.cache, self.batcher)
+        # THE property: restore is byte-exact
+        assert self.canon() == before
+        for b in touched:
+            self.cache._unregister_block(b)
+        tset = set(touched)
+        for slot, seq in enumerate(self.batcher.slots):
+            if seq is not None and tset & set(self.cache.slots[slot].blocks):
+                self.eng._evict(seq, self.sched, self.cache, self.batcher,
+                                self.metrics, reason="rollback_recompute")
+        plan.sampled = np.arange(64, dtype=np.int64)
+        self.eng._commit_apply(plan, self.batcher)
+        self.pending = None
+        self.drain_intake()
+
+    def cancel(self):
+        live = [r for r in self.req_ids
+                if self.eng._seq_index[r].state != "finished"]
+        if live:
+            self.eng.cancel(self.rnd.choice(live))
+
+    def step(self):
+        op = self.rnd.choice(["submit", "dispatch", "dispatch", "commit",
+                              "commit", "rollback", "cancel"])
+        getattr(self, op)()
+        self.check_blocks()
+
+    def drain(self):
+        """Run plain dispatch/commit until everything finishes; then the
+        allocator must be whole again (prefix cache off => zero cached)."""
+        if self.pending is not None:
+            self.commit()
+        for _ in range(300):
+            self.dispatch()
+            empty = self.pending[0].empty
+            self.commit()
+            if empty and not self.sched.has_waiting():
+                break
+        else:
+            pytest.fail("machine did not drain")
+        assert self.batcher.num_active == 0
+        assert self.cache.allocator.free_count == (self.total_blocks
+                                                   - self.cache.cached_blocks)
+        done = sum(1 for r in self.req_ids
+                   if self.eng._seq_index[r].state == "finished")
+        assert done == self.submitted
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_double_buffer_state_machine(smoke_state, seed):
+    m = _RowMachine(smoke_state, seed)
+    for _ in range(3):
+        m.submit()
+    for _ in range(60):
+        m.step()
+    m.drain()
+
+
+try:
+    from hypothesis import settings
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     rule, run_state_machine_as_test)
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_double_buffer_hypothesis(smoke_state):
+    """Hypothesis-driven variant of the seeded machine (shrinking finds
+    minimal failing op sequences when the invariants break)."""
+
+    class Machine(RuleBasedStateMachine):
+        @initialize()
+        def setup(self):
+            self.m = _RowMachine(smoke_state, 0)
+
+        @rule()
+        def submit(self):
+            self.m.submit()
+            self.m.check_blocks()
+
+        @rule()
+        def dispatch(self):
+            self.m.dispatch()
+            self.m.check_blocks()
+
+        @rule()
+        def commit(self):
+            self.m.commit()
+            self.m.check_blocks()
+
+        @rule()
+        def rollback(self):
+            self.m.rollback()
+            self.m.check_blocks()
+
+        @rule()
+        def cancel(self):
+            self.m.cancel()
+
+        def teardown(self):
+            self.m.drain()
+
+    run_state_machine_as_test(
+        Machine, settings=settings(max_examples=10, deadline=None))
+
+
+# ------------------------------------- satellite: streaming + cancellation
+
+def _run_session(eng, reqs, cancel_after=None, buffer=8, consumer_sleep=0.0):
+    """Serve ``reqs`` through a StreamSession on a worker thread; returns
+    per-request (streamed_tokens, result, peak_queue_depth)."""
+
+    async def main():
+        session = StreamSession(stream_buffer=buffer)
+        session.loop = asyncio.get_running_loop()
+        worker = threading.Thread(target=eng.serve_session, args=(session,))
+        worker.start()
+
+        async def client(i, rq):
+            ca = (cancel_after or {}).get(i)
+            h = session.submit(rq)
+            if ca == 0:
+                h.cancel()
+            toks, qpeak = [], 0
+            async for tok in h.tokens():
+                qpeak = max(qpeak, h.queue.qsize())
+                toks.append(tok)
+                if consumer_sleep:
+                    await asyncio.sleep(consumer_sleep)
+                if ca is not None and len(toks) >= ca:
+                    h.cancel()
+            return toks, await h.wait_result(), qpeak
+
+        outs = await asyncio.gather(*[client(i, r)
+                                      for i, r in enumerate(reqs)])
+        session.close()
+        await session.join()
+        worker.join()
+        return outs
+
+    return asyncio.run(main())
+
+
+@pytest.mark.parametrize("lookahead", [False, True])
+def test_stream_token_order_matches_batch(smoke_state, lookahead):
+    """Streamed tokens arrive exactly once, in order, and equal both the
+    final Result and the closed-batch sync output."""
+    reqs = _requests(smoke_state[0])
+    base = _gen(reqs, _mk(smoke_state, lookahead=False).generate(reqs))
+    eng = _mk(smoke_state, lookahead=lookahead)
+    outs = _run_session(eng, reqs)
+    for i, (toks, res, _) in enumerate(outs):
+        assert res is not None and not res.cancelled
+        assert toks == list(map(int, res.tokens[len(reqs[i].prompt):]))
+        assert toks == base[i]
+    if lookahead:
+        assert eng.last_metrics.summary()["lookahead_iterations"] > 0
+
+
+@pytest.mark.parametrize("lookahead", [False, True])
+def test_cancellation_unwinds_and_frees_slots(smoke_state, lookahead):
+    """Mid-stream and pre-admission cancels produce cancelled Results whose
+    tokens extend the streamed prefix; survivors complete bit-identically
+    (which requires the cancelled requests' slots to actually free —
+    max_batch=2 with 6 requests starves otherwise)."""
+    reqs = _requests(smoke_state[0])
+    base = _gen(reqs, _mk(smoke_state, lookahead=False).generate(reqs))
+    eng = _mk(smoke_state, lookahead=lookahead)
+    outs = _run_session(eng, reqs, cancel_after={2: 2, 5: 0})
+    for i, (toks, res, _) in enumerate(outs):
+        assert res is not None
+        gen = list(map(int, res.tokens[len(reqs[i].prompt):]))
+        if i in (2, 5):
+            assert res.cancelled
+            assert len(gen) < len(base[i]) or gen == base[i]
+            assert gen[:len(toks)] == toks
+        else:
+            assert not res.cancelled and toks == gen == base[i]
+    assert eng.last_metrics.summary()["cancellations"] == 2
+
+
+def test_cancellation_mid_spec_round(smoke_state):
+    """Cancelling a request seated in the speculative decoder frees its
+    slot PAIR at the next round boundary; survivors are unaffected."""
+    spec = SpecConfig(draft_rank=0.9, spec_len=3)
+    reqs = _requests(smoke_state[0])
+    base = _gen(reqs, _mk(smoke_state, spec=spec,
+                          lookahead=False).generate(reqs))
+    eng = _mk(smoke_state, spec=spec)
+    outs = _run_session(eng, reqs, cancel_after={0: 2})
+    for i, (toks, res, _) in enumerate(outs):
+        assert res is not None
+        if i == 0:
+            assert res.cancelled
+        else:
+            assert not res.cancelled
+            assert toks == base[i]
+
+
+def test_slow_consumer_backpressure(smoke_state):
+    """A stream_buffer=1 queue bounds the engine->client pipeline: the
+    handle never holds more than one undelivered token, yet every token
+    still arrives in order (the engine blocks, it does not drop)."""
+    reqs = _requests(smoke_state[0], spec=MIX[:3])
+    base = _gen(reqs, _mk(smoke_state, lookahead=False).generate(reqs))
+    eng = _mk(smoke_state, lookahead=True)
+    outs = _run_session(eng, reqs, buffer=1, consumer_sleep=0.01)
+    for i, (toks, res, qpeak) in enumerate(outs):
+        assert toks == base[i]
+        assert qpeak <= 1

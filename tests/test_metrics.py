@@ -180,3 +180,58 @@ def test_family_kind_fixed_without_child_construction():
     # empty families are skipped by exposition without probing the factory
     assert "probe_total" not in reg.prometheus_text()
     assert built == []
+
+
+# ------------------------------------------- overlapped iteration timing
+
+def test_iteration_timing_overlap_split_no_double_count():
+    """Pipelined iterations report (dispatch_s, host_s, overlap_s) where
+    overlap_s is device time hidden under host work. The attribution
+    invariant (scripted clock pins the wall interval): wall-clock time is
+    covered by sum(dispatch) + sum(host) alone — overlapped device time is
+    attributed ONCE, to the host side it hid under, never double-counted."""
+    m = ServingMetrics(clock=FakeClock([0.0, 1.2]))
+    m.on_submit(0)                             # t=0 stamps _start
+    # iteration 1: 0.1s visible sync + 0.5s host, 0.4s of device time
+    # ran hidden under the previous host work
+    m.on_iteration_timing(0.1, 0.5, overlap_s=0.4)
+    # iteration 2: a serial engine's report — no overlap argument
+    m.on_iteration_timing(0.2, 0.4)
+    s = m.summary()                            # t=1.2 closes the window
+    assert s["dispatch_s_total"] == pytest.approx(0.3)
+    assert s["host_s_total"] == pytest.approx(0.9)
+    assert s["overlap_s_total"] == pytest.approx(0.4)
+    # wall ~ dispatch + host: the 0.4s overlap is inside host time already
+    assert s["dispatch_s_total"] + s["host_s_total"] == pytest.approx(
+        s["wall_s"])
+    # overlap fraction = hidden / total device busy = 0.4 / (0.4 + 0.3)
+    assert s["overlap_fraction"] == pytest.approx(0.4 / 0.7)
+    assert s["overlap_ms_mean"] == pytest.approx(200.0)
+
+
+def test_iteration_timing_negative_overlap_clamps():
+    """A dispatch that finished before the host side even started measuring
+    reports a non-positive overlap; it must clamp to zero rather than
+    deflate the totals."""
+    m = ServingMetrics(clock=FakeClock([0.0, 1.0]))
+    m.on_submit(0)
+    m.on_iteration_timing(0.1, 0.2, overlap_s=-0.5)
+    s = m.summary()
+    assert s["overlap_s_total"] == 0.0
+    assert s["overlap_fraction"] == 0.0
+
+
+def test_lookahead_rollback_cancel_counters():
+    m = ServingMetrics(clock=FakeClock([float(i) for i in range(10)]))
+    m.on_submit(0)
+    m.on_lookahead()
+    m.on_lookahead()
+    m.on_rollback("fault_injection")
+    m.on_rollback("cancellation")
+    m.on_rollback("cancellation")
+    m.on_cancel(0)
+    s = m.summary()
+    assert s["lookahead_iterations"] == 2
+    assert s["rollbacks"] == 3
+    assert s["cancellations"] == 1
+    assert m.rollback_reasons == {"fault_injection": 1, "cancellation": 2}
